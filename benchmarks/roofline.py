@@ -1,0 +1,90 @@
+"""Roofline table generator: reads experiments/dryrun/*.json (written by
+launch/dryrun.py) and renders the §Roofline tables for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "internvl2-76b", "starcoder2-7b", "gemma3-4b", "minicpm3-4b",
+    "qwen3-14b", "whisper-tiny", "falcon-mamba-7b",
+    "phi3.5-moe-42b-a6.6b", "moonshot-v1-16b-a3b", "zamba2-7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(outdir="experiments/dryrun"):
+    cells = {}
+    for path in glob.glob(os.path.join(outdir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return cells
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(cells, mesh="16x16"):
+    rows = []
+    header = (
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL/HLO | HBM GiB/dev | status |"
+    )
+    rows.append(header)
+    rows.append("|" + "---|" * 9)
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape, mesh))
+            if r is None:
+                rows.append(f"| {arch} | {shape} | - | - | - | - | - | - | MISSING |")
+                continue
+            if "skipped" in r:
+                rows.append(
+                    f"| {arch} | {shape} | - | - | - | - | - | - | {r['skipped']} |"
+                )
+                continue
+            if "error" in r:
+                rows.append(
+                    f"| {arch} | {shape} | - | - | - | - | - | - | "
+                    f"ERROR {r['error'][:40]} |"
+                )
+                continue
+            rf = r["roofline"]
+            mem = r["memory"].get("peak_bytes_per_device_est", 0) / 2**30
+            ratio = rf.get("useful_flops_ratio", 0.0)
+            rows.append(
+                f"| {arch} | {shape} | {fmt_s(rf['compute_s'])} | "
+                f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+                f"{rf['dominant']} | {ratio:.2f} | {mem:.1f} | ok |"
+            )
+    return "\n".join(rows)
+
+
+def summary(cells):
+    ok = sum(1 for r in cells.values() if "roofline" in r)
+    skip = sum(1 for r in cells.values() if "skipped" in r)
+    err = sum(1 for r in cells.values() if "error" in r)
+    return {"ok": ok, "skipped": skip, "errors": err, "total": len(cells)}
+
+
+def main():
+    cells = load()
+    print("# 16x16 (single pod, 256 chips)")
+    print(table(cells, "16x16"))
+    print()
+    print("# 2x16x16 (two pods, 512 chips)")
+    print(table(cells, "2x16x16"))
+    print()
+    print("summary:", summary(cells))
+
+
+if __name__ == "__main__":
+    main()

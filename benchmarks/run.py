@@ -1,0 +1,165 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * table1_*       — paper Table 1 (cycles per mode + speedups)
+  * fig5_pruning   — hazard-pair pruning on the FFT code (Fig. 5)
+  * forwarding_*   — §7.3.2 store-to-load forwarding impact
+  * wave_*         — TPU wave-executor parallelism (Fig. 1c analogue)
+  * kernel_*       — Pallas kernel microbenches (interpret mode walltime;
+    shape-correctness is the signal on CPU, not speed)
+  * roofline summary — dry-run cell counts (full tables in EXPERIMENTS.md)
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _t(fn, *args, reps=3, **kw):
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def bench_table1(emit):
+    from benchmarks.paper_table1 import run_table, summarize
+
+    rows = run_table()
+    for r in rows:
+        emit(
+            f"table1_{r['kernel']}",
+            r["FUS2_wall_s"] * 1e6,
+            f"STA={r['STA']};LSQ={r['LSQ']};FUS1={r['FUS1']};FUS2={r['FUS2']}"
+            f";fus2_vs_lsq={r['LSQ']/r['FUS2']:.2f}"
+            f";fus2_vs_sta={r['STA']/r['FUS2']:.2f}",
+        )
+    s = summarize(rows)
+    emit(
+        "table1_hmean", 0,
+        f"fus2_vs_lsq={s['FUS2_vs_LSQ_hmean']:.2f}"
+        f";fus2_vs_sta={s['FUS2_vs_STA_hmean']:.2f}"
+        f";paper=4x_and_14x",
+    )
+
+
+def bench_pruning(emit):
+    from repro.core import dae, hazards, monotonic, programs
+
+    for name in ("fft", "matpower", "pagerank"):
+        prog, arrays, params = programs.get(name).make(
+            64 if name != "fft" else 64
+        )
+        d = dae.decouple(prog)
+        infos = monotonic.analyze_program(prog)
+        us, plan = _t(
+            hazards.build_plan, prog, d, infos, True, reps=3
+        )
+        total = len(plan.pairs) + len(plan.pruned)
+        emit(
+            f"fig5_pruning_{name}", us,
+            f"enumerated={total};kept={len(plan.pairs)};pruned={len(plan.pruned)}",
+        )
+
+
+def bench_forwarding(emit):
+    from repro.core import programs, simulator
+
+    for name in ("hist+add", "matpower", "fft"):
+        prog, arrays, params = programs.get(name).make(64)
+        f1 = simulator.simulate(prog, arrays, params, mode="FUS1")
+        f2 = simulator.simulate(prog, arrays, params, mode="FUS2")
+        emit(
+            f"forwarding_{name}", 0,
+            f"fus1={f1.cycles};fus2={f2.cycles}"
+            f";speedup={f1.cycles/f2.cycles:.2f};forwards={f2.forwards}",
+        )
+
+
+def bench_waves(emit):
+    from repro.core import executor, programs
+
+    for name in programs.all_names():
+        scale = 64 if name == "fft" else 96
+        prog, arrays, params = programs.get(name).make(scale)
+        us, res = _t(executor.execute, prog, arrays, params, reps=1)
+        emit(
+            f"wave_{name}", us,
+            f"requests={res.stats.n_requests};waves={res.stats.n_waves}"
+            f";parallelism={res.stats.parallelism:.1f}",
+        )
+
+
+def bench_kernels(emit):
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    from repro.kernels.du_hazard.ops import hazard_frontier
+    src = jnp.sort(jax.random.randint(ks[0], (4096,), 0, 2048))
+    dst = jax.random.randint(ks[1], (4096,), 0, 2048)
+    us, _ = _t(
+        lambda: jax.block_until_ready(
+            hazard_frontier(src, dst, interpret=True)
+        ), reps=2,
+    )
+    emit("kernel_du_hazard_4k", us, "interpret=True")
+
+    from repro.kernels.moe_group_mm.kernel import group_matmul
+    x = jax.random.normal(ks[2], (512, 64))
+    w = jax.random.normal(ks[3], (8, 64, 64)) * 0.1
+    be = jax.random.randint(ks[4], (16,), 0, 8).astype(jnp.int32)
+    us, _ = _t(
+        lambda: jax.block_until_ready(
+            group_matmul(x, w, be, block_t=32, interpret=True)
+        ), reps=2,
+    )
+    emit("kernel_moe_group_mm", us, "8e_512t_interpret")
+
+    from repro.kernels.attention.ops import flash_attention
+    q = jax.random.normal(ks[5], (4, 256, 64))
+    k = jax.random.normal(ks[6], (4, 256, 64))
+    v = jax.random.normal(ks[7], (4, 256, 64))
+    us, _ = _t(
+        lambda: jax.block_until_ready(
+            flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+        ), reps=2,
+    )
+    emit("kernel_flash_attention", us, "4x256x64_interpret")
+
+
+def bench_roofline_summary(emit):
+    from benchmarks import roofline
+
+    cells = roofline.load()
+    if not cells:
+        emit("roofline_cells", 0, "missing_run_dryrun_first")
+        return
+    s = roofline.summary(cells)
+    emit(
+        "roofline_cells", 0,
+        f"ok={s['ok']};skipped={s['skipped']};errors={s['errors']}",
+    )
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    bench_table1(emit)
+    bench_pruning(emit)
+    bench_forwarding(emit)
+    bench_waves(emit)
+    bench_kernels(emit)
+    bench_roofline_summary(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Dynamic loop fusion on a sparse, data-dependent program (bnn).
+
+The addresses come from CSR index arrays — no static analysis can fuse
+these loops (paper §3.3); the programmer asserts per-row monotonicity
+and the DU disambiguates at runtime. Shows the full compiler pipeline:
+DAE decoupling, schedule synthesis, hazard plan, and the measured
+speedup of dynamic fusion over static/LSQ HLS.
+
+Run:  PYTHONPATH=src python examples/fusion_demo.py
+"""
+
+import numpy as np
+
+from repro.core import dae, loopir, monotonic, programs, schedule, simulator
+
+prog, arrays, params = programs.get("bnn").make(96)
+
+print("== DAE decoupling (paper Fig. 3) ==")
+d = dae.decouple(prog)
+for pe in d.pes:
+    print(f"  PE{pe.id}: loops={[l.var for l in pe.path]} "
+          f"mem_ops={pe.mem_ops} AGU_stmts={pe.agu_stmt_count} "
+          f"CU_stmts={pe.cu_stmt_count}")
+
+print("\n== program-order schedules (paper §4) ==")
+traces = schedule.trace_program(prog, d, arrays, params)
+for op_id, tr in list(traces.items())[:2]:
+    print(f"  {op_id}: first 5 schedules {tr.sched[:5].tolist()} "
+          f"addrs {tr.addr[:5].tolist()}")
+
+print("\n== simulated systems ==")
+oracle = loopir.interpret(prog, arrays, params)
+results = {}
+for mode in ("STA", "LSQ", "FUS1", "FUS2"):
+    res = simulator.simulate(prog, arrays, params, mode=mode)
+    results[mode] = res.cycles
+    assert all(np.allclose(res.arrays[k], oracle[k]) for k in oracle)
+    print(f"  {mode:5s}: {res.cycles:7d} cycles")
+print(f"\n  dynamic fusion speedup: {results['STA']/results['FUS2']:.1f}x vs "
+      f"static HLS, {results['LSQ']/results['FUS2']:.1f}x vs LSQ dynamic HLS")

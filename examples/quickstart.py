@@ -1,0 +1,57 @@
+"""Quickstart: the paper's Fig. 1 end to end, in one minute on CPU.
+
+Two sibling loops with a RAW dependency through memory:
+
+    for i in range(n): A[f(i)] = produce(i)     # producer loop
+    for j in range(n): out[j] = consume(A[g(j)])  # consumer loop
+
+Static HLS and LSQ-based dynamic HLS must run these sequentially; with
+monotonic f(i), dynamic loop fusion overlaps them. This script shows:
+  1. the compiler analysis (monotonicity, hazard pairs, pruning),
+  2. the cycle-level DU simulation of all four systems (paper Table 1),
+  3. the TPU adaptation: the same disambiguation as one vectorized
+     frontier merge + fused kernel (kernels/du_hazard, fused_stream).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import executor, loopir, monotonic, programs, simulator
+
+# -- 1. compiler analysis ----------------------------------------------------
+prog, arrays, params = programs.get("RAWloop").make(2048)
+infos = monotonic.analyze_program(prog)
+print("== address monotonicity analysis ==")
+for info in infos.values():
+    print(" ", info.describe())
+
+comp = simulator.Compiled(prog, forwarding=True)
+print("\n== hazard plan ==")
+print(comp.plan.summary())
+
+# -- 2. the four systems of paper Table 1 ------------------------------------
+print("\n== cycle simulation (paper Table 1 structure) ==")
+oracle = loopir.interpret(prog, arrays, params)
+for mode in ("STA", "LSQ", "FUS1", "FUS2"):
+    res = simulator.simulate(prog, arrays, params, mode=mode)
+    exact = all(np.allclose(res.arrays[k], oracle[k]) for k in oracle)
+    print(f"  {mode:5s}: {res.cycles:7d} cycles   exact={exact}")
+
+# -- 3. TPU adaptation: wave partitioning + fused kernel ----------------------
+print("\n== TPU wave executor (Fig. 1c parallelism) ==")
+res = executor.execute(prog, arrays, params)
+print(f"  {res.stats.n_requests} requests execute in {res.stats.n_waves} "
+      f"waves -> {res.stats.parallelism:.0f}x cross-loop parallelism")
+
+import jax.numpy as jnp
+from repro.kernels.fused_stream.ops import fused_raw_loops
+
+src = jnp.asarray(np.arange(2048))          # monotonic producer addresses
+val = jnp.asarray(arrays["d0"] * 2.0)       # produced values
+dst = jnp.asarray(np.arange(2048))          # consumer addresses
+mem = jnp.zeros(2048)
+vals, hits = fused_raw_loops(src, val, dst, mem, interpret=True)
+assert np.allclose(np.asarray(vals), np.asarray(val))
+print(f"  Pallas fused kernel: {int(hits.sum())}/{len(dst)} consumer reads "
+      "forwarded on-chip, zero sequentialization")

@@ -1,0 +1,47 @@
+"""End-to-end training driver demo: a ~100M-class config trained for a
+few hundred steps with the full production stack — sharded data
+pipeline, AdamW, async atomic checkpoints, fault-tolerant resume.
+
+On this CPU container we default to a reduced qwen3-family config and
+200 steps (a few minutes); pass --full100m for the ~100M variant if you
+have the cores/time. The same driver runs any of the ten assigned
+architectures (--arch <name>).
+
+Run:  PYTHONPATH=src python examples/train_tiny_e2e.py
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full100m", action="store_true")
+    args = ap.parse_args()
+
+    if args.full100m:
+        # ~100M params: register a scaled config on the fly
+        import dataclasses
+        from repro.configs import base as configs
+
+        base = configs.get("qwen3-14b")
+        configs.register(dataclasses.replace(
+            base, name="qwen3-100m", n_layers=8, d_model=768, n_heads=12,
+            n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32000,
+        ))
+        losses = train.main([
+            "--arch", "qwen3-100m", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "512", "--ckpt-dir",
+            "/tmp/repro_100m_ckpt", "--ckpt-every", "50",
+        ])
+    else:
+        losses = train.main([
+            "--arch", "qwen3-14b", "--reduced", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--lr", "1e-3",
+            "--ckpt-dir", "/tmp/repro_tiny_ckpt", "--ckpt-every", "50",
+        ])
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")

@@ -1,0 +1,10 @@
+"""starcoder2-7b [dense]: GQA + RoPE, non-gated gelu MLP.
+[arXiv:2402.19173; hf]"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+    d_ff=18432, vocab=49152, head_dim=128,
+    attn_type="gqa", rope_theta=1e5, gated=False, act="gelu",
+))

@@ -1,0 +1,297 @@
+"""DAE decoupling pass (paper §2.1.2, Fig. 3).
+
+Decouples a loop forest into Processing Elements:
+
+  * each *leaf* loop becomes its own PE, replicating the loop control of
+    all its ancestors,
+  * parent-body statements are assigned to the PE of the next leaf loop
+    in topological order (Fig. 3: "Parent loop body instructions are
+    included only if they come before the leaf loop"),
+  * scalar values flowing between PEs become FIFO edges, written in the
+    producer loop's exit block and read in the consumer's pre-header,
+  * each PE is further split AGU/CU by def-use closure: the AGU keeps
+    the address/trip computation (plus §4.2 schedule instrumentation,
+    added later), the CU keeps value computation; dead code on each side
+    is eliminated (we record instruction counts so the DCE effect is
+    observable in tests/benchmarks).
+
+Loss-of-decoupling (LoD): if an address or trip count depends on a
+*protected* load value (``LoadVal``), the AGU cannot run ahead. The
+paper resolves this with speculation from prior work [62]; none of the
+paper's benchmarks need it and we reject such programs explicitly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+from repro.core import loopir as ir
+
+
+class LossOfDecoupling(Exception):
+    """Raised when an AGU would depend on a protected load value."""
+
+
+# ---------------------------------------------------------------------------
+# def-use helpers
+# ---------------------------------------------------------------------------
+
+
+def expr_deps(e: ir.Expr) -> tuple[set[str], set[str]]:
+    """Returns (local names, protected load ids) referenced by ``e``."""
+    locals_, loads = set(), set()
+
+    def walk(x: ir.Expr):
+        if isinstance(x, ir.Local):
+            locals_.add(x.name)
+        elif isinstance(x, ir.LoadVal):
+            loads.add(x.load_id)
+        elif isinstance(x, ir.Bin):
+            walk(x.a)
+            walk(x.b)
+        elif isinstance(x, ir.Un):
+            walk(x.a)
+        elif isinstance(x, ir.Read):
+            walk(x.index)
+
+    walk(e)
+    return locals_, loads
+
+
+def _stmt_exprs(s: ir.Stmt) -> list[ir.Expr]:
+    if isinstance(s, ir.Load):
+        return [s.addr]
+    if isinstance(s, ir.Store):
+        out = [s.addr, s.value]
+        if s.guard is not None:
+            out.append(s.guard)
+        return out
+    if isinstance(s, ir.SetLocal):
+        return [s.value]
+    if isinstance(s, ir.Loop):
+        out = [s.trip]
+        for iv in s.ivars:
+            out.extend([iv.init, iv.step])
+        for b in s.body:
+            out.extend(_stmt_exprs(b))
+        return out
+    raise TypeError(s)
+
+
+# ---------------------------------------------------------------------------
+# PE structure
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PE:
+    id: int
+    # full loop path of the leaf, outermost first (replicated control)
+    path: tuple[ir.Loop, ...]
+    # statements executed by this PE *inside the leaf body* plus any
+    # parent-body statements assigned to it: list of (stmt, depth) where
+    # depth is the 1-indexed loop depth the stmt executes at
+    stmts: list[tuple[ir.Stmt, int]] = dataclasses.field(default_factory=list)
+    mem_ops: list[str] = dataclasses.field(default_factory=list)
+    # locals this PE defines that other PEs consume -> FIFO writes
+    fifo_out: set[str] = dataclasses.field(default_factory=set)
+    # locals this PE consumes that other PEs define -> FIFO reads
+    fifo_in: set[str] = dataclasses.field(default_factory=set)
+    # AGU/CU instruction counts after the def-use split + DCE
+    agu_stmt_count: int = 0
+    cu_stmt_count: int = 0
+
+    @property
+    def leaf(self) -> ir.Loop:
+        return self.path[-1]
+
+    @property
+    def depth(self) -> int:
+        return len(self.path)
+
+
+@dataclasses.dataclass
+class DAEResult:
+    pes: list[PE]
+    op_to_pe: dict[str, int]
+    # FIFO edges: (producer PE id, consumer PE id, local name, shared depth)
+    fifo_edges: list[tuple[int, int, str, int]]
+
+    def shared_depth(self, op_a: str, op_b: str, program: ir.Program) -> int:
+        """Number of common loops of the two ops' original nests."""
+        _, pa = program.find_op(op_a)
+        _, pb = program.find_op(op_b)
+        k = 0
+        for la, lb in zip(pa, pb):
+            if la is lb:
+                k += 1
+            else:
+                break
+        return k
+
+
+def decouple(program: ir.Program) -> DAEResult:
+    """Run the decoupling pass over the program's loop forest."""
+    pes: list[PE] = []
+    op_to_pe: dict[str, int] = {}
+    # local name -> PE id that defines it (for FIFO edge construction)
+    local_def_pe: dict[str, int] = {}
+    local_use_pes: dict[str, set[int]] = {}
+
+    # ---- step 1: assign leaf loops and statements to PEs -----------------
+
+    def is_leaf(lp: ir.Loop) -> bool:
+        return not any(isinstance(s, ir.Loop) for s in lp.body)
+
+    def walk(stmts, path: tuple[ir.Loop, ...], pending: list[tuple[ir.Stmt, int]]):
+        """``pending`` collects parent-body stmts awaiting the next leaf."""
+        for s in stmts:
+            if isinstance(s, ir.Loop):
+                sub_path = path + (s,)
+                if is_leaf(s):
+                    pe = PE(id=len(pes), path=sub_path)
+                    pe.stmts = list(pending)
+                    pending.clear()
+                    for b in s.body:
+                        pe.stmts.append((b, len(sub_path)))
+                        if isinstance(b, (ir.Load, ir.Store)):
+                            pe.mem_ops.append(b.id)
+                            op_to_pe[b.id] = pe.id
+                    pes.append(pe)
+                else:
+                    walk(s.body, sub_path, pending)
+            else:
+                pending.append((s, len(path)))
+                if isinstance(s, (ir.Load, ir.Store)):
+                    # memory op directly in a parent body: belongs to the
+                    # next leaf PE (recorded when that PE is created)
+                    pass
+
+    for top in program.loops:
+        pending: list[tuple[ir.Stmt, int]] = []
+        if is_leaf(top):
+            pe = PE(id=len(pes), path=(top,))
+            for b in top.body:
+                pe.stmts.append((b, 1))
+                if isinstance(b, (ir.Load, ir.Store)):
+                    pe.mem_ops.append(b.id)
+                    op_to_pe[b.id] = pe.id
+            pes.append(pe)
+        else:
+            walk(top.body, (top,), pending)
+            if pending and pes:
+                # trailing parent-body stmts: assign to the last PE
+                pes[-1].stmts.extend(pending)
+
+    # register mem ops that came in via ``pending`` parent stmts
+    for pe in pes:
+        for s, _d in pe.stmts:
+            if isinstance(s, (ir.Load, ir.Store)) and s.id not in op_to_pe:
+                pe.mem_ops.append(s.id)
+                op_to_pe[s.id] = pe.id
+
+    # ---- step 2: FIFO edges for cross-PE scalar locals --------------------
+
+    for pe in pes:
+        for s, _d in pe.stmts:
+            if isinstance(s, ir.SetLocal):
+                local_def_pe.setdefault(s.name, pe.id)
+            for e in _stmt_exprs(s) if not isinstance(s, ir.Loop) else []:
+                for name in expr_deps(e)[0]:
+                    local_use_pes.setdefault(name, set()).add(pe.id)
+        # ivar init/steps may also use locals
+        for lp in pe.path:
+            for iv in lp.ivars:
+                for e in (iv.init, iv.step):
+                    for name in expr_deps(e)[0]:
+                        local_use_pes.setdefault(name, set()).add(pe.id)
+
+    fifo_edges: list[tuple[int, int, str, int]] = []
+    for name, users in sorted(local_use_pes.items()):
+        if name not in local_def_pe:
+            continue
+        prod = local_def_pe[name]
+        for u in sorted(users):
+            if u != prod:
+                shared = _shared_depth_pe(pes[prod], pes[u])
+                fifo_edges.append((prod, u, name, shared))
+                pes[prod].fifo_out.add(name)
+                pes[u].fifo_in.add(name)
+
+    # ---- step 3: AGU/CU def-use split + DCE accounting + LoD check --------
+
+    for pe in pes:
+        agu, cu = _split_agu_cu(pe)
+        pe.agu_stmt_count = agu
+        pe.cu_stmt_count = cu
+
+    return DAEResult(pes=pes, op_to_pe=op_to_pe, fifo_edges=fifo_edges)
+
+
+def _shared_depth_pe(a: PE, b: PE) -> int:
+    k = 0
+    for la, lb in zip(a.path, b.path):
+        if la is lb:
+            k += 1
+        else:
+            break
+    return k
+
+
+def _split_agu_cu(pe: PE) -> tuple[int, int]:
+    """Compute AGU/CU statement counts after the def-use split.
+
+    AGU closure: everything feeding addresses, trip counts and ivar
+    updates. If that closure touches a protected LoadVal, the AGU can no
+    longer run ahead (loss of decoupling) -> reject.
+    """
+    # locals needed on the AGU side (transitively)
+    agu_exprs: list[ir.Expr] = []
+    for lp in pe.path:
+        agu_exprs.append(lp.trip)
+        for iv in lp.ivars:
+            agu_exprs.extend([iv.init, iv.step])
+    for s, _d in pe.stmts:
+        if isinstance(s, (ir.Load, ir.Store)):
+            agu_exprs.append(s.addr)
+
+    needed_locals: set[str] = set()
+    frontier = set()
+    for e in agu_exprs:
+        ls, lds = expr_deps(e)
+        if lds:
+            raise LossOfDecoupling(
+                f"PE {pe.id}: address/trip depends on protected load(s) {sorted(lds)}"
+            )
+        frontier |= ls
+    # transitive closure over SetLocal defs within the PE
+    setlocals = {
+        s.name: s for s, _d in pe.stmts if isinstance(s, ir.SetLocal)
+    }
+    while frontier:
+        name = frontier.pop()
+        if name in needed_locals:
+            continue
+        needed_locals.add(name)
+        if name in setlocals:
+            ls, lds = expr_deps(setlocals[name].value)
+            if lds:
+                raise LossOfDecoupling(
+                    f"PE {pe.id}: AGU local {name!r} depends on load(s) {sorted(lds)}"
+                )
+            frontier |= ls - needed_locals
+
+    agu_count = 0
+    cu_count = 0
+    for s, _d in pe.stmts:
+        if isinstance(s, (ir.Load, ir.Store)):
+            agu_count += 1  # send_address
+            cu_count += 1  # consume_value / produce_value
+        elif isinstance(s, ir.SetLocal):
+            if s.name in needed_locals:
+                agu_count += 1
+            # value-side locals always stay in the CU (DCE removes them
+            # from the AGU unless address-feeding)
+            cu_count += 1
+    return agu_count, cu_count

@@ -1,0 +1,171 @@
+"""TPU-native fused executor: dynamic loop fusion as *wave partitioning*.
+
+This is the hardware adaptation described in DESIGN.md §2. On an FPGA
+the DU stalls each request until its Hazard Safety Check passes; on a
+TPU (bulk-synchronous SPMD) we instead *partition* the fused request
+stream into **waves**: wave(r) = 1 + max(wave of every request that must
+commit before r). All requests in one wave are conflict-free and execute
+data-parallel; the wave count is the critical path of the fused program
+— the fine-grained cross-loop parallelism of the paper's Fig. 1(c).
+
+Dependencies are exact (addresses are known after the AGU pass — the
+same property the paper's monotonicity exploits to avoid history
+searches):
+
+  * memory edges: for each address, a load depends on the nearest
+    preceding store; a store depends on the nearest preceding store and
+    every load since it (computed in one program-order sweep — the
+    vectorized analogue is the monotonic frontier merge in
+    ``kernels/du_hazard``),
+  * dataflow edges: a store depends on the loads of its own iteration
+    (DAE value chain), approximated PE-locally by "store depends on the
+    most recent loads of its PE".
+
+``execute`` returns the final memory state (bit-identical to the
+sequential oracle) plus wave statistics; ``frontier_merge`` is the
+vectorized monotonic-streams primitive shared with the Pallas kernels
+and the MoE dispatch path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import loopir as ir
+
+
+@dataclasses.dataclass
+class WaveStats:
+    n_requests: int
+    n_waves: int
+    sequential_depth: int  # = n_requests (one request per step, fused b/w)
+
+    @property
+    def parallelism(self) -> float:
+        return self.n_requests / max(self.n_waves, 1)
+
+
+@dataclasses.dataclass
+class ExecResult:
+    arrays: dict[str, np.ndarray]
+    stats: WaveStats
+    waves: np.ndarray  # per-request wave index, in program order
+
+
+def frontier_merge(src_addr: np.ndarray, dst_addr: np.ndarray) -> np.ndarray:
+    """For each dst request (monotonic source stream!): the number of src
+    requests that must commit before it = |{i : src_addr[i] <= dst}|
+    under monotonic non-decreasing src_addr. This is the §3.1 insight
+    vectorized: one searchsorted instead of an address-history search.
+
+    Returns the required src commit count per dst element.
+    """
+    return np.searchsorted(src_addr, dst_addr, side="right")
+
+
+def execute(
+    program: ir.Program,
+    arrays: dict[str, np.ndarray],
+    params: Optional[dict[str, int]] = None,
+) -> ExecResult:
+    """Wave-partitioned fused execution, validated against the oracle by
+    construction: effects are applied in oracle order inside each wave,
+    and conflicting requests never share a wave."""
+    params = params or {}
+
+    # --- pass 1: program-order request trace from the oracle walk -------
+    req_op: list[str] = []
+    req_addr: list[int] = []
+    req_store: list[bool] = []
+    req_valid: list[bool] = []
+    req_value: list[Optional[float]] = []
+
+    def hook(op_id, addr, is_store, valid, value):
+        req_op.append(op_id)
+        req_addr.append(addr)
+        req_store.append(is_store)
+        req_valid.append(valid)
+        req_value.append(value)
+
+    final = ir.interpret(program, arrays, params, trace_hook=hook)
+
+    n = len(req_op)
+    op_pe = _op_pe_map(program)
+
+    # --- pass 2: wave assignment (one program-order sweep) ---------------
+    waves = np.zeros(n, dtype=np.int64)
+    # per (array, addr): wave of last store; max wave of loads since it
+    last_store_wave: dict[tuple[str, int], int] = {}
+    loads_since_store: dict[tuple[str, int], int] = {}
+    # per PE: max wave of recent loads (dataflow into store values)
+    pe_load_wave: dict[int, int] = {}
+    op_array = {op.id: op.array for op, _ in program.mem_ops()}
+
+    for i in range(n):
+        key = (op_array[req_op[i]], req_addr[i])
+        w = 0
+        if req_store[i]:
+            # WAW: after last store; WAR: after every load since it;
+            # dataflow: after this PE's recent loads (value availability)
+            w = max(
+                last_store_wave.get(key, -1) + 1,
+                loads_since_store.get(key, -1) + 1,
+                pe_load_wave.get(op_pe[req_op[i]], -1) + 1,
+            )
+            if req_valid[i]:
+                last_store_wave[key] = w
+                loads_since_store[key] = -1
+            else:
+                # §6: invalid stores occupy a wave slot (they update the
+                # frontier in hardware) but have no memory effect
+                last_store_wave[key] = max(last_store_wave.get(key, -1), w)
+        else:
+            # RAW: after the last store to this address
+            w = last_store_wave.get(key, -1) + 1
+            loads_since_store[key] = max(loads_since_store.get(key, -1), w)
+            pe = op_pe[req_op[i]]
+            pe_load_wave[pe] = max(pe_load_wave.get(pe, -1), w)
+        waves[i] = w
+
+    n_waves = int(waves.max()) + 1 if n else 0
+
+    # --- pass 3: wave-ordered replay (validation by construction) --------
+    # Within a wave: all loads first (conflict-freedom guarantees no
+    # same-address store in the same wave), then all stores.
+    out = {k: np.array(v, copy=True) for k, v in arrays.items()}
+    order = np.argsort(waves, kind="stable")
+    got_loads: dict[int, float] = {}
+    pos = 0
+    for w in range(n_waves):
+        # gather this wave's request indices (order is wave-major, stable)
+        batch = []
+        while pos < len(order) and waves[order[pos]] == w:
+            batch.append(int(order[pos]))
+            pos += 1
+        for i in batch:
+            if not req_store[i]:
+                got_loads[i] = float(out[op_array[req_op[i]]][req_addr[i]])
+        for i in batch:
+            if req_store[i] and req_valid[i]:
+                out[op_array[req_op[i]]][req_addr[i]] = req_value[i]
+
+    # loads must have observed oracle values
+    for i in range(n):
+        if not req_store[i]:
+            assert np.isclose(got_loads[i], req_value[i], atol=1e-9), (
+                f"wave executor divergence at request {i} ({req_op[i]}, "
+                f"addr {req_addr[i]}): got {got_loads[i]}, oracle {req_value[i]}"
+            )
+
+    stats = WaveStats(n_requests=n, n_waves=n_waves, sequential_depth=n)
+    return ExecResult(arrays=out, stats=stats, waves=waves)
+
+
+def _op_pe_map(program: ir.Program) -> dict[str, int]:
+    from repro.core import dae as daelib
+
+    d = daelib.decouple(program)
+    return d.op_to_pe

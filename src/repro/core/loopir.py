@@ -1,0 +1,448 @@
+"""LoopIR: a small loop-forest IR for irregular streaming programs.
+
+This is the input language of the dynamic-loop-fusion compiler (the
+paper's benchmarks in §7.2 are all expressible in it). Design mirrors
+what the paper's passes see in LLVM IR:
+
+  * a *forest* of loop nests executed in program (topological) order,
+  * explicit induction variables (``IVar``) whose add/mul updates are
+    exactly what SCEV turns into chains of recurrences,
+  * memory operations (``Load``/``Store``) against named arrays; arrays
+    read through ``Read`` expressions are *unprotected* read-only data
+    (index arrays such as CSR ``row_ptr`` — the paper protects one base
+    pointer per DU, read-only inputs need no protection),
+  * optional ``guard`` predicates on stores (the §6 control-flow /
+    speculation case),
+  * user monotonicity assertions for data-dependent addresses (§3.3).
+
+The module also provides the **sequential oracle**: a reference
+interpreter whose final memory state defines correctness for every
+executor (cycle simulator, fused JAX executor, Pallas kernels).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import cr as crlib
+
+# ---------------------------------------------------------------------------
+# Expressions
+# ---------------------------------------------------------------------------
+
+
+class Expr:
+    def __add__(self, o):
+        return Bin("+", self, wrap(o))
+
+    def __radd__(self, o):
+        return Bin("+", wrap(o), self)
+
+    def __sub__(self, o):
+        return Bin("-", self, wrap(o))
+
+    def __rsub__(self, o):
+        return Bin("-", wrap(o), self)
+
+    def __mul__(self, o):
+        return Bin("*", self, wrap(o))
+
+    def __rmul__(self, o):
+        return Bin("*", wrap(o), self)
+
+    def __floordiv__(self, o):
+        return Bin("//", self, wrap(o))
+
+    def __mod__(self, o):
+        return Bin("%", self, wrap(o))
+
+    def __lt__(self, o):
+        return Bin("<", self, wrap(o))
+
+    def __le__(self, o):
+        return Bin("<=", self, wrap(o))
+
+    def __gt__(self, o):
+        return Bin(">", self, wrap(o))
+
+    def __ge__(self, o):
+        return Bin(">=", self, wrap(o))
+
+    def eq(self, o):
+        return Bin("==", self, wrap(o))
+
+    def ne(self, o):
+        return Bin("!=", self, wrap(o))
+
+
+@dataclasses.dataclass(frozen=True)
+class Const(Expr):
+    v: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Param(Expr):
+    """Runtime scalar parameter, with a conservative range for analysis."""
+
+    name: str
+    lo: int = 0
+    hi: int = crlib.INF
+
+
+@dataclasses.dataclass(frozen=True)
+class Var(Expr):
+    """Induction variable of an enclosing loop (the canonical 0,1,2,...
+    counter) or a declared auxiliary IVar."""
+
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Local(Expr):
+    """A loop-carried scalar local (defined by SetLocal)."""
+
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Read(Expr):
+    """Read-only (unprotected) array read, e.g. CSR row_ptr/col_idx."""
+
+    array: str
+    index: Expr
+    # optional user range assertion for the values read (helps analysis)
+    lo: int = -crlib.INF
+    hi: int = crlib.INF
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadVal(Expr):
+    """Value of the protected Load statement with the given id, in the
+    current iteration."""
+
+    load_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Bin(Expr):
+    op: str
+    a: Expr
+    b: Expr
+
+
+@dataclasses.dataclass(frozen=True)
+class Un(Expr):
+    op: str  # tanh | relu | neg | abs | sign | exp
+    a: Expr
+
+
+def wrap(v: Union[int, float, Expr]) -> Expr:
+    return v if isinstance(v, Expr) else Const(v)
+
+
+_UN_FNS: dict[str, Callable] = {
+    "tanh": np.tanh,
+    "relu": lambda x: np.maximum(x, 0),
+    "neg": lambda x: -x,
+    "abs": np.abs,
+    "sign": np.sign,
+    "exp": np.exp,
+}
+
+
+def _binop(op: str, a, b):
+    if op == "+":
+        return a + b
+    if op == "-":
+        return a - b
+    if op == "*":
+        return a * b
+    if op == "//":
+        return a // b
+    if op == "%":
+        return a % b
+    if op == "min":
+        return min(a, b)
+    if op == "max":
+        return max(a, b)
+    if op == "<":
+        return a < b
+    if op == "<=":
+        return a <= b
+    if op == ">":
+        return a > b
+    if op == ">=":
+        return a >= b
+    if op == "==":
+        return a == b
+    if op == "!=":
+        return a != b
+    raise ValueError(f"unknown binop {op}")
+
+
+# ---------------------------------------------------------------------------
+# Statements
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MonotonicHint:
+    """User assertion (§3.3): the address is monotonically non-decreasing
+    in the innermost loop. ``non_monotonic_outer`` lists 1-indexed outer
+    depths that reset the address (None = assume *all* outer depths are
+    non-monotonic — maximally conservative)."""
+
+    innermost_monotonic: bool = True
+    non_monotonic_outer: Optional[frozenset[int]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Load:
+    id: str
+    array: str
+    addr: Expr
+    hint: Optional[MonotonicHint] = None
+
+    @property
+    def is_store(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Store:
+    id: str
+    array: str
+    addr: Expr
+    value: Expr
+    guard: Optional[Expr] = None  # §6: store under an if-condition
+    hint: Optional[MonotonicHint] = None
+
+    @property
+    def is_store(self) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class IVar:
+    """Auxiliary induction variable of a loop: ``name = init`` before the
+    loop, ``name = name (op) step`` at the end of each iteration. This is
+    the source-level origin of non-affine CRs, e.g. FFT's stride *= 2
+    gives the paper's {2, ×, 2} recurrence."""
+
+    name: str
+    init: Expr
+    op: str  # '+' or '*'
+    step: Expr
+
+
+@dataclasses.dataclass(frozen=True)
+class SetLocal:
+    """Assign a loop-carried scalar local (reduction accumulators etc.)."""
+
+    name: str
+    value: Expr
+
+
+@dataclasses.dataclass(frozen=True)
+class Loop:
+    var: str
+    trip: Expr
+    body: tuple  # of Load | Store | SetLocal | Loop
+    ivars: tuple[IVar, ...] = ()
+    # False models loops whose exit predicate cannot be computed one
+    # iteration in advance (paper §4.2(3): lastIter hint degrades to 0).
+    predictable: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "body", tuple(self.body))
+        object.__setattr__(self, "ivars", tuple(self.ivars))
+
+
+Stmt = Union[Load, Store, SetLocal, Loop]
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    name: str
+    loops: tuple[Loop, ...]  # the forest, in program order
+    # arrays written/read via protected Load/Store and Read
+    params: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "loops", tuple(self.loops))
+        object.__setattr__(self, "params", tuple(self.params))
+
+    # -- structural helpers -------------------------------------------------
+
+    def mem_ops(self) -> list[tuple[Union[Load, Store], tuple[Loop, ...]]]:
+        """All memory ops in topological (program) order, each with its
+        enclosing loop path (outermost first)."""
+        out = []
+
+        def walk(stmts, path):
+            for s in stmts:
+                if isinstance(s, Loop):
+                    walk(s.body, path + (s,))
+                elif isinstance(s, (Load, Store)):
+                    out.append((s, path))
+
+        walk(self.loops, ())
+        return out
+
+    def op_index(self) -> dict[str, int]:
+        """Topological order index for each memory op id."""
+        return {op.id: i for i, (op, _) in enumerate(self.mem_ops())}
+
+    def find_op(self, op_id: str) -> tuple[Union[Load, Store], tuple[Loop, ...]]:
+        for op, path in self.mem_ops():
+            if op.id == op_id:
+                return op, path
+        raise KeyError(op_id)
+
+    def static_positions(self) -> tuple[dict[int, int], dict[str, int]]:
+        """(loop object id -> index in parent body, op id -> index in its
+        body). Together with per-depth counters these give a global
+        lexicographic program order — the polyhedral 2d+1 schedule."""
+        loop_pos: dict[int, int] = {}
+        op_pos: dict[str, int] = {}
+
+        def walk(stmts):
+            for idx, s in enumerate(stmts):
+                if isinstance(s, Loop):
+                    loop_pos[id(s)] = idx
+                    walk(s.body)
+                elif isinstance(s, (Load, Store)):
+                    op_pos[s.id] = idx
+
+        walk(self.loops)
+        return loop_pos, op_pos
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle interpreter
+# ---------------------------------------------------------------------------
+
+
+class _Env:
+    """Chained mutable scopes for loop vars / ivars / locals."""
+
+    def __init__(self, parent: Optional["_Env"] = None):
+        self.parent = parent
+        self.vals: dict[str, float] = {}
+
+    def get(self, name: str):
+        e = self
+        while e is not None:
+            if name in e.vals:
+                return e.vals[name]
+            e = e.parent
+        raise KeyError(name)
+
+    def set_existing(self, name: str, v) -> bool:
+        e = self
+        while e is not None:
+            if name in e.vals:
+                e.vals[name] = v
+                return True
+            e = e.parent
+        return False
+
+    def define(self, name: str, v):
+        self.vals[name] = v
+
+
+def _eval(e: Expr, env: _Env, arrays, params, loadvals) -> float:
+    if isinstance(e, Const):
+        return e.v
+    if isinstance(e, Param):
+        return params[e.name]
+    if isinstance(e, (Var, Local)):
+        return env.get(e.name)
+    if isinstance(e, Read):
+        idx = int(_eval(e.index, env, arrays, params, loadvals))
+        return arrays[e.array][idx]
+    if isinstance(e, LoadVal):
+        return loadvals[e.load_id]
+    if isinstance(e, Bin):
+        return _binop(
+            e.op,
+            _eval(e.a, env, arrays, params, loadvals),
+            _eval(e.b, env, arrays, params, loadvals),
+        )
+    if isinstance(e, Un):
+        return _UN_FNS[e.op](_eval(e.a, env, arrays, params, loadvals))
+    raise TypeError(f"cannot eval {e!r}")
+
+
+def interpret(
+    program: Program,
+    arrays: dict[str, np.ndarray],
+    params: Optional[dict[str, int]] = None,
+    trace_hook: Optional[Callable] = None,
+) -> dict[str, np.ndarray]:
+    """Run the program sequentially; returns the final array state.
+
+    This is THE semantics. Every executor must reproduce it bit-for-bit
+    (modulo float associativity, which we avoid by executing in the same
+    per-element order).
+
+    ``trace_hook(op_id, addr, is_store, valid, value)`` is called for
+    every memory operation *in program order*, including mis-speculated
+    stores (guard false -> valid=False, value=None) — the request exists
+    in the decoupled machine even when the effect doesn't (§6).
+    """
+    params = params or {}
+    arrays = {k: np.array(v, copy=True) for k, v in arrays.items()}
+
+    def run_body(stmts: Sequence[Stmt], env: _Env):
+        loadvals: dict[str, float] = {}
+        for s in stmts:
+            if isinstance(s, Load):
+                a = int(_eval(s.addr, env, arrays, params, loadvals))
+                v = arrays[s.array][a]
+                if trace_hook is not None:
+                    trace_hook(s.id, a, False, True, float(v))
+                loadvals[s.id] = v
+            elif isinstance(s, Store):
+                a = int(_eval(s.addr, env, arrays, params, loadvals))
+                if s.guard is not None and not _eval(
+                    s.guard, env, arrays, params, loadvals
+                ):
+                    if trace_hook is not None:
+                        trace_hook(s.id, a, True, False, None)
+                    continue
+                v = _eval(s.value, env, arrays, params, loadvals)
+                if trace_hook is not None:
+                    trace_hook(s.id, a, True, True, float(v))
+                arrays[s.array][a] = v
+            elif isinstance(s, SetLocal):
+                v = _eval(s.value, env, arrays, params, loadvals)
+                if not env.set_existing(s.name, v):
+                    env.define(s.name, v)
+            elif isinstance(s, Loop):
+                run_loop(s, env)
+            else:
+                raise TypeError(f"unknown stmt {s!r}")
+
+    def run_loop(loop: Loop, env: _Env):
+        outer = _Env(env)
+        for iv in loop.ivars:
+            outer.define(iv.name, _eval(iv.init, env, arrays, params, {}))
+        trip = int(_eval(loop.trip, env, arrays, params, {}))
+        for i in range(trip):
+            inner = _Env(outer)
+            inner.define(loop.var, i)
+            run_body(loop.body, inner)
+            for iv in loop.ivars:
+                cur = outer.get(iv.name)
+                step = _eval(iv.step, inner, arrays, params, {})
+                outer.vals[iv.name] = cur + step if iv.op == "+" else cur * step
+        return
+
+    top = _Env()
+    for lp in program.loops:
+        run_loop(lp, top)
+    return arrays

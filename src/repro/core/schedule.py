@@ -1,0 +1,172 @@
+"""Program-order schedule generation (paper §4).
+
+The schedule representation, per memory operation of loop depth n:
+
+  * an n-tuple of counters, one per loop depth, each incremented by 1 at
+    every invocation of that loop's body — *never reset* when inner
+    loops re-enter (§4 item 2),
+  * comparisons between two operations use ONLY the element at their
+    innermost shared depth k, with comparator direction configured from
+    topological order (§4 item 3, synthesized in hazards.py),
+  * one ``lastIter`` bit per non-monotonic loop depth, computed one
+    iteration in advance when the loop is ``predictable`` (§4.1/§4.2(3)),
+  * at stream end the AGU emits a sentinel (schedule = +inf, addr = +inf)
+    signalling no further requests (§4.2(4)).
+
+This module runs the AGU semantics (decoupled address threads, which by
+the LoD check never depend on protected load values) ahead of time and
+materializes each op's full request stream — the software analogue of
+the AGU "running ahead" of the compute pipeline (§2.1.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import dae as daelib
+from repro.core import loopir as ir
+
+SENTINEL = np.int64(2**62)
+
+
+@dataclasses.dataclass
+class OpTrace:
+    """Full AGU request stream for one memory operation."""
+
+    op_id: str
+    pe_id: int
+    depth: int
+    is_store: bool
+    sched: np.ndarray  # (n_req, depth) int64, counters start at 1
+    addr: np.ndarray  # (n_req,) int64
+    lastiter: np.ndarray  # (n_req, depth) bool
+    seq: np.ndarray = None  # (n_req,) int64: per-PE AGU generation order
+
+    @property
+    def n_req(self) -> int:
+        return len(self.addr)
+
+
+@dataclasses.dataclass
+class PETrace:
+    pe_id: int
+    ops: dict[str, OpTrace]
+    n_leaf_iters: int  # total leaf-body invocations (for timing models)
+
+
+def trace_program(
+    program: ir.Program,
+    dae: daelib.DAEResult,
+    arrays: dict[str, np.ndarray],
+    params: Optional[dict[str, int]] = None,
+) -> dict[str, OpTrace]:
+    """Generate the AGU request streams of every memory op in every PE."""
+    params = params or {}
+    out: dict[str, OpTrace] = {}
+    for pe in dae.pes:
+        t = _trace_pe(pe, arrays, params)
+        out.update(t.ops)
+    return out
+
+
+def _trace_pe(
+    pe: daelib.PE, arrays: dict[str, np.ndarray], params: dict[str, int]
+) -> PETrace:
+    # recorded streams per op
+    rec: dict[str, dict[str, list]] = {
+        op_id: {"sched": [], "addr": [], "lastiter": [], "seq": []}
+        for op_id in pe.mem_ops
+    }
+    seq_counter = [0]
+    op_depth: dict[str, int] = {}
+    op_store: dict[str, bool] = {}
+
+    # group the PE's statements by depth
+    by_depth: dict[int, list[ir.Stmt]] = {}
+    for s, d in pe.stmts:
+        by_depth.setdefault(d, []).append(s)
+
+    counters = [0] * (pe.depth + 1)  # 1-indexed
+    n_leaf = 0
+
+    env = ir._Env()
+
+    def eval_expr(e: ir.Expr, scope: ir._Env):
+        # AGU-side evaluation: LoadVal is impossible here (LoD check)
+        return ir._eval(e, scope, arrays, params, {})
+
+    # per-depth "is current iteration the last one" flags
+    last_flags = [False] * (pe.depth + 1)
+
+    def run_depth(d: int, scope: ir._Env):
+        nonlocal n_leaf
+        loop = pe.path[d - 1]
+        loop_scope = ir._Env(scope)
+        for iv in loop.ivars:
+            loop_scope.define(iv.name, eval_expr(iv.init, scope))
+        trip = int(eval_expr(loop.trip, scope))
+        for i in range(trip):
+            counters[d] += 1
+            body = ir._Env(loop_scope)
+            body.define(loop.var, i)
+            # §4.2(3): lastIter computed one iteration in advance when the
+            # loop predicate is predictable; otherwise the hint is 0.
+            last_flags[d] = (i == trip - 1) if loop.predictable else False
+            if d == pe.depth:
+                n_leaf += 1
+            for s in by_depth.get(d, ()):  # this depth's statements
+                exec_stmt(s, body, d)
+            if d < pe.depth:
+                run_depth(d + 1, body)
+            for iv in loop.ivars:
+                cur = loop_scope.get(iv.name)
+                step = eval_expr(iv.step, body)
+                loop_scope.vals[iv.name] = (
+                    cur + step if iv.op == "+" else cur * step
+                )
+
+    def exec_stmt(s: ir.Stmt, scope: ir._Env, d: int):
+        if isinstance(s, (ir.Load, ir.Store)):
+            # speculation (§6): requests are generated unconditionally —
+            # guarded stores get a valid bit from the CU at sim time
+            a = int(eval_expr(s.addr, scope))
+            r = rec[s.id]
+            r["sched"].append(tuple(counters[1 : d + 1]))
+            r["addr"].append(a)
+            r["lastiter"].append(tuple(last_flags[1 : d + 1]))
+            r["seq"].append(seq_counter[0])
+            seq_counter[0] += 1
+            op_depth[s.id] = d
+            op_store[s.id] = isinstance(s, ir.Store)
+        elif isinstance(s, ir.SetLocal):
+            # AGU keeps only address-feeding locals; evaluating all
+            # load-free locals is a superset and harmless
+            _, lds = daelib.expr_deps(s.value)
+            if not lds:
+                v = eval_expr(s.value, scope)
+                if not scope.set_existing(s.name, v):
+                    scope.define(s.name, v)
+        # nested Loop stmts cannot appear: PE stmts are flattened
+
+    if pe.depth >= 1:
+        run_depth(1, env)
+
+    ops = {}
+    for op_id in pe.mem_ops:
+        r = rec[op_id]
+        d = op_depth.get(op_id, pe.depth)
+        n = len(r["addr"])
+        ops[op_id] = OpTrace(
+            op_id=op_id,
+            pe_id=pe.id,
+            depth=d,
+            is_store=op_store.get(op_id, False),
+            sched=np.array(r["sched"], dtype=np.int64).reshape(n, d),
+            addr=np.array(r["addr"], dtype=np.int64).reshape(n),
+            lastiter=np.array(r["lastiter"], dtype=bool).reshape(n, d),
+            seq=np.array(r["seq"], dtype=np.int64).reshape(n),
+        )
+    return PETrace(pe_id=pe.id, ops=ops, n_leaf_iters=n_leaf)

@@ -1,0 +1,735 @@
+"""Cycle-level simulator of the four evaluated systems (paper §7.1).
+
+Modes:
+  * ``STA``  — static HLS baseline: leaf-loop *instances* execute in
+    program order (with automatic static fusion of hazard-free sibling
+    loops, as Intel HLS does); loops with potential intra-loop memory
+    dependencies run at a conservative static II; bursting LSUs. STA is
+    evaluated analytically (static schedules are closed-form by
+    definition); its result arrays come from the sequential oracle.
+  * ``LSQ``  — dynamic HLS with a load-store queue [60]: loop instances
+    still sequential, intra-loop hazards resolved dynamically by the
+    same check machinery, but a *non-bursting* LSU (burst size 1).
+  * ``FUS1`` — this paper: all PEs run concurrently, every memory
+    request gated only by the synthesized Hazard Safety Checks.
+  * ``FUS2`` — FUS1 + store-to-load forwarding (§5.5).
+
+LSQ/FUS modes execute real memory semantics: loads read the backing
+array when their DRAM burst completes (or take a forwarded value),
+stores commit at burst completion, mis-speculated stores (§6) enter the
+pending buffer with their valid bit and ACK at the buffer head without a
+DRAM request (Fig. 7). The final state is compared against the
+sequential oracle — that comparison is what validates the hazard logic.
+
+Timing model (``SimParams``): a single DRAM channel serves bursts in
+issue order; a burst occupies the channel for ``channel_occupancy``
+cycles and completes ``dram_latency`` cycles after issue; per-port
+dynamic coalescing closes a burst at ``burst_size`` requests or after
+``burst_timeout`` idle cycles (§2.1.1, N=16). Each port moves at most
+one request per cycle (the paper's II=1 pipelines).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from repro.core import dae as daelib
+from repro.core import du as dulib
+from repro.core import hazards as hz
+from repro.core import loopir as ir
+from repro.core import monotonic as mono
+from repro.core import schedule as schedlib
+
+
+@dataclasses.dataclass
+class SimParams:
+    dram_latency: int = 200
+    burst_size: int = 16
+    burst_timeout: int = 16
+    channel_occupancy: int = 2  # cycles a burst holds the channel
+    cu_latency: int = 8  # load value -> dependent store value
+    forward_latency: int = 1
+    # static II for loops with potential memory dependencies: a static
+    # pipeline cannot disambiguate, so the loop is scheduled at the DRAM
+    # round-trip dependence distance (load -> compute -> store visible).
+    # Calibrated against paper Table 1 per-iteration cycle counts
+    # (hist+add STA: ~110 cycles/iter at 286 MHz).
+    sta_mem_dep_ii: int = 160
+    pipeline_fill: int = 20  # static pipeline fill/drain per loop instance
+    max_cycles: int = 50_000_000
+
+
+@dataclasses.dataclass
+class SimResult:
+    cycles: int
+    arrays: dict[str, np.ndarray]
+    mode: str
+    dram_bursts: int = 0
+    dram_requests: int = 0
+    forwards: int = 0
+
+
+# ---------------------------------------------------------------------------
+# shared compile front-end
+# ---------------------------------------------------------------------------
+
+
+class Compiled:
+    """Everything the paper's compiler derives statically for a program."""
+
+    def __init__(self, program: ir.Program, forwarding: bool):
+        self.program = program
+        self.dae = daelib.decouple(program)
+        if self.dae.fifo_edges:
+            raise NotImplementedError(
+                "cross-PE scalar FIFOs are not modelled; communicate "
+                "cross-loop scalars through a protected array"
+            )
+        self.infos = mono.analyze_program(program)
+        self.plan = hz.build_plan(program, self.dae, self.infos, forwarding)
+        self.op_array = {op.id: op.array for op, _ in program.mem_ops()}
+        self.op_path = {op.id: path for op, path in program.mem_ops()}
+        self.loop_pos, self.op_pos = program.static_positions()
+        # unpruned view for the *static* analysis (STA cannot prune
+        # dynamically; any potential pair forces a conservative schedule)
+        self.all_pairs = self.plan.pairs + [p for p, _ in self.plan.pruned]
+
+    def pe_has_mem_dep(self, pe_id: int) -> bool:
+        return any(
+            p.same_pe and self.dae.op_to_pe[p.dst] == pe_id
+            for p in self.all_pairs
+        )
+
+    def cross_pe_pairs(self, a: int, b: int) -> list[hz.HazardPair]:
+        return [
+            p
+            for p in self.all_pairs
+            if {self.dae.op_to_pe[p.dst], self.dae.op_to_pe[p.src]} == {a, b}
+        ]
+
+
+# ---------------------------------------------------------------------------
+# instance bookkeeping (sequential baselines + STA analytical model)
+# ---------------------------------------------------------------------------
+
+
+_KEY_LEN = 18
+
+
+def _request_key(comp: Compiled, tr, i: int, fuse_group: dict[int, int]):
+    """Program-order instance key of one request: positions and counters
+    interleaved (the polyhedral 2d+1 schedule), with the trailing leaf
+    counter dropped so all iterations of one leaf-loop instance share a
+    key. Fused sibling leaves share the group leader's position."""
+    pe = comp.dae.pes[tr.pe_id]
+    path = comp.op_path[tr.op_id]
+    parts: list[int] = []
+    if tr.depth == pe.depth:
+        for j in range(tr.depth - 1):
+            parts += [comp.loop_pos[id(path[j])], int(tr.sched[i][j])]
+        leader = comp.dae.pes[fuse_group[tr.pe_id]]
+        parts.append(comp.loop_pos[id(leader.leaf)])
+    else:  # parent-body op: its own micro-instance per iteration
+        for j in range(tr.depth):
+            parts += [comp.loop_pos[id(path[j])], int(tr.sched[i][j])]
+        parts.append(comp.op_pos[tr.op_id])
+    return tuple(parts) + (-1,) * (_KEY_LEN - len(parts))
+
+
+def _instances(
+    comp: Compiled,
+    traces: dict[str, schedlib.OpTrace],
+    fuse_group: dict[int, int],
+):
+    """Group requests into program-ordered leaf-loop instances."""
+    keys: dict[tuple, dict] = {}
+    for op_id, tr in traces.items():
+        pe = comp.dae.pes[tr.pe_id]
+        for i in range(tr.n_req):
+            key = _request_key(comp, tr, i, fuse_group)
+            d = keys.setdefault(
+                key, {"requests": 0, "loads": 0, "pes": set(), "iters": {}}
+            )
+            d["requests"] += 1
+            if not tr.is_store:
+                d["loads"] += 1
+            d["pes"].add(tr.pe_id)
+            if tr.depth == pe.depth:
+                s = d["iters"].setdefault(tr.pe_id, set())
+                s.add(int(tr.sched[i][-1]))
+    ordered = sorted(keys)
+    return ordered, keys
+
+
+# ---------------------------------------------------------------------------
+# STA: analytical static-schedule model
+# ---------------------------------------------------------------------------
+
+
+def _fusion_groups_sta(comp: Compiled) -> dict[int, int]:
+    """Static loop fusion (Intel-HLS-like): merge consecutive sibling PEs
+    with identical parents, structurally equal trip counts, and no
+    possible cross-PE hazard pair."""
+    fuse = {pe.id: pe.id for pe in comp.dae.pes}
+    for a, b in zip(comp.dae.pes, comp.dae.pes[1:]):
+        if (
+            len(a.path) == len(b.path)
+            and a.path[:-1] == b.path[:-1]
+            and a.leaf.trip == b.leaf.trip
+            and not comp.cross_pe_pairs(a.id, b.id)
+        ):
+            fuse[b.id] = fuse[a.id]
+    return fuse
+
+
+def _simulate_sta(
+    comp: Compiled,
+    traces: dict[str, schedlib.OpTrace],
+    arrays: dict[str, np.ndarray],
+    params: dict[str, int],
+    p: SimParams,
+) -> SimResult:
+    fuse = _fusion_groups_sta(comp)
+    order, info = _instances(comp, traces, fuse)
+
+    total = 0
+    bursts = 0
+    requests = 0
+    for key in order:
+        d = info[key]
+        # concurrent fused PEs: instance latency = max over members
+        lat = 0
+        for pe_id in d["pes"]:
+            ii = p.sta_mem_dep_ii if comp.pe_has_mem_dep(pe_id) else 1
+            lat = max(lat, len(d["iters"].get(pe_id, (1,))) * ii)
+        fill = p.pipeline_fill + (p.dram_latency if d["loads"] else 0)
+        # DRAM bandwidth bound for this instance (bursting LSUs)
+        n_bursts = -(-d["requests"] // p.burst_size)
+        bw = n_bursts * p.channel_occupancy
+        total += fill + max(lat, bw)
+        bursts += n_bursts
+        requests += d["requests"]
+
+    final = ir.interpret(comp.program, arrays, params)
+    return SimResult(
+        cycles=total,
+        arrays=final,
+        mode="STA",
+        dram_bursts=bursts,
+        dram_requests=requests,
+    )
+
+
+# ---------------------------------------------------------------------------
+# event-driven engine (LSQ / FUS1 / FUS2)
+# ---------------------------------------------------------------------------
+
+
+class _Burst:
+    __slots__ = ("port", "entries", "opened_at", "closed", "complete_at")
+
+    def __init__(self, port, now):
+        self.port = port
+        self.entries: list[dulib.PendingEntry] = []
+        self.opened_at = now
+        self.closed = False
+        self.complete_at = -1
+
+
+class _CU:
+    """Compute-unit thread of one PE: executes leaf iterations in order,
+    consuming load values (in-order FIFO per load op) and producing store
+    values with §6 valid bits."""
+
+    def __init__(self, pe: daelib.PE, arrays, params):
+        self.pe = pe
+        self.arrays = arrays
+        self.params = params
+        self.time = 0
+        self.done = False
+        self.waiting_on: Optional[str] = None
+        self.outbox: list[tuple[str, float, bool]] = []
+        self.gen = self._generator()
+        self._advance(prime=True)
+
+    def _generator(self):
+        pe = self.pe
+        by_depth: dict[int, list[ir.Stmt]] = {}
+        for s, d in pe.stmts:
+            by_depth.setdefault(d, []).append(s)
+
+        def ev(e, scope, loadvals):
+            return ir._eval(e, scope, self.arrays, self.params, loadvals)
+
+        def run_depth(d, scope):
+            loop = pe.path[d - 1]
+            loop_scope = ir._Env(scope)
+            for iv in loop.ivars:
+                loop_scope.define(iv.name, ev(iv.init, scope, {}))
+            trip = int(ev(loop.trip, scope, {}))
+            for i in range(trip):
+                body = ir._Env(loop_scope)
+                body.define(loop.var, i)
+                loadvals: dict[str, float] = {}
+                for s in by_depth.get(d, ()):
+                    if isinstance(s, ir.Load):
+                        v = yield ("need", s.id)
+                        loadvals[s.id] = v
+                    elif isinstance(s, ir.Store):
+                        valid = True
+                        if s.guard is not None:
+                            valid = bool(ev(s.guard, body, loadvals))
+                        val = ev(s.value, body, loadvals) if valid else 0.0
+                        self.outbox.append((s.id, val, valid))
+                    elif isinstance(s, ir.SetLocal):
+                        v = ev(s.value, body, loadvals)
+                        if not body.set_existing(s.name, v):
+                            body.define(s.name, v)
+                if d < pe.depth:
+                    yield from run_depth(d + 1, body)
+                for iv in loop.ivars:
+                    cur = loop_scope.get(iv.name)
+                    step = ev(iv.step, body, {})
+                    loop_scope.vals[iv.name] = (
+                        cur + step if iv.op == "+" else cur * step
+                    )
+
+        if pe.depth >= 1:
+            yield from run_depth(1, ir._Env())
+
+    def _advance(self, value: float = 0.0, prime: bool = False):
+        try:
+            item = next(self.gen) if prime else self.gen.send(value)
+            while True:
+                if item[0] == "need":
+                    self.waiting_on = item[1]
+                    return
+                item = next(self.gen)  # pragma: no cover (stores don't yield)
+        except StopIteration:
+            self.done = True
+            self.waiting_on = None
+
+    def feed(self, value: float, at_time: int):
+        assert self.waiting_on is not None
+        self.time = max(self.time, at_time)
+        self.waiting_on = None
+        self._advance(value)
+
+
+class Engine:
+    def __init__(
+        self,
+        comp: Compiled,
+        traces: dict[str, schedlib.OpTrace],
+        arrays: dict[str, np.ndarray],
+        params: dict[str, int],
+        mode: str,
+        p: SimParams,
+    ):
+        self.comp = comp
+        self.traces = traces
+        self.mode = mode
+        self.p = p
+        self.forwarding = mode == "FUS2"
+        self.sequential = mode == "LSQ"
+        self.burst_size = 1 if mode == "LSQ" else p.burst_size
+
+        self.mem = {k: np.array(v, copy=True) for k, v in arrays.items()}
+        self.params = params
+        self.ports = {op_id: dulib.Port(tr) for op_id, tr in traces.items()}
+        self.pairs_by_dst: dict[str, list[hz.HazardPair]] = {}
+        for pr in comp.plan.pairs:
+            self.pairs_by_dst.setdefault(pr.dst, []).append(pr)
+
+        # §5.6 NoDependence bits
+        self.nodep_bits: dict[tuple[str, str], np.ndarray] = {}
+        for pr in comp.plan.pairs:
+            if pr.nodependence:
+                lt, st = traces[pr.dst], traces[pr.src]
+                idx = np.searchsorted(st.seq, lt.seq, side="left") - 1
+                prev = np.where(
+                    idx >= 0, st.addr[np.maximum(idx, 0)], -(2**62)
+                )
+                self.nodep_bits[(pr.dst, pr.src)] = lt.addr > prev
+
+        self.cus = {
+            pe.id: _CU(pe, self.mem, params) for pe in comp.dae.pes
+        }
+        self.store_values: dict[str, list[tuple[int, float, bool]]] = {}
+        self.ready_loads: dict[str, list[dulib.PendingEntry]] = {}
+
+        if self.sequential:
+            fuse = {pe.id: pe.id for pe in comp.dae.pes}  # LSQ: no fusion
+            order, _ = _instances(comp, traces, fuse)
+            self.inst_rank = {k: i for i, k in enumerate(order)}
+            self.inst_outstanding = [0] * len(order)
+            self.req_inst: dict[tuple[str, int], int] = {}
+            for op_id, tr in traces.items():
+                for i in range(tr.n_req):
+                    r = self.inst_rank[_request_key(comp, tr, i, fuse)]
+                    self.req_inst[(op_id, i)] = r
+                    self.inst_outstanding[r] += 1
+            self.inst_window = 0
+
+        self.open_bursts: dict[str, _Burst] = {}
+        self.channel_free_at = 0
+        self.events: list[tuple[int, int, str, object]] = []
+        self._n = 0
+        self.now = 0
+        self.port_issued_at: dict[str, int] = {k: -1 for k in self.ports}
+        self.result = SimResult(cycles=0, arrays={}, mode=mode)
+        # debug: per-op oracle load values for first-divergence detection
+        self.oracle_loads: Optional[dict[str, list[float]]] = None
+        self.issue_log: dict[tuple[str, int], list[str]] = {}
+
+    # -- events ---------------------------------------------------------
+
+    def _post(self, t, kind, payload=None):
+        self._n += 1
+        heapq.heappush(self.events, (t, self._n, kind, payload))
+
+    # -- main loop --------------------------------------------------------
+
+    def run(self) -> SimResult:
+        for cu in self.cus.values():
+            self._drain_outbox(cu)
+        while True:
+            cycle_progress = False
+            # 1. process all events due now
+            while self.events and self.events[0][0] <= self.now:
+                _, _, kind, payload = heapq.heappop(self.events)
+                self._event(kind, payload)
+                cycle_progress = True
+            # 2. settle combinational progress at this cycle
+            while self._settle():
+                cycle_progress = True
+            if self._all_done():
+                break
+            # 3. advance time. If this cycle made progress, the next cycle
+            # may too (per-port issue pacing resets). Otherwise nothing
+            # can change until the next event — jump straight to it.
+            if cycle_progress:
+                self.now += 1
+            elif self.events:
+                self.now = max(self.now + 1, self.events[0][0])
+            else:
+                self._deadlock()
+            if self.now > self.p.max_cycles:
+                raise RuntimeError("max_cycles exceeded")
+        self.result.cycles = self.now
+        self.result.arrays = self.mem
+        return self.result
+
+    def _all_done(self):
+        return (
+            all(p.exhausted and not p.pending for p in self.ports.values())
+            and all(cu.done for cu in self.cus.values())
+            and not self.open_bursts
+        )
+
+    def _deadlock(self):
+        lines = [f"DEADLOCK at cycle {self.now} mode={self.mode}"]
+        for op_id, p in self.ports.items():
+            lines.append(
+                f"  {op_id}: next={p.next}/{p.trace.n_req} pending={len(p.pending)}"
+                f" ack_addr={p.ack_addr} ack_sched={p.ack_sched}"
+            )
+        for pe_id, cu in self.cus.items():
+            lines.append(f"  cu{pe_id}: done={cu.done} waiting={cu.waiting_on}")
+        raise RuntimeError("\n".join(lines))
+
+    # -- cycle work ---------------------------------------------------------
+
+    def _settle(self) -> bool:
+        progressed = False
+        for op_id, port in self.ports.items():
+            if self.port_issued_at[op_id] == self.now:
+                continue  # one request per port per cycle
+            if not port.exhausted and self._try_issue(op_id, port):
+                self.port_issued_at[op_id] = self.now
+                progressed = True
+        for op_id in list(self.open_bursts):
+            b = self.open_bursts[op_id]
+            if (
+                not b.closed
+                and b.entries
+                and self.now - b.opened_at >= self.p.burst_timeout
+            ):
+                self._close_burst(op_id, b)
+                progressed = True
+        for port in self.ports.values():
+            if not port.is_store and self._deliver(port):
+                progressed = True
+        if self.sequential and self._advance_window():
+            progressed = True
+        return progressed
+
+    def _try_issue(self, op_id: str, port: dulib.Port) -> bool:
+        idx = port.next
+        if self.sequential and self.req_inst[(op_id, idx)] > self.inst_window:
+            return False
+        # stores: the request is sent together with its value (§5.5: a
+        # store moves to the pending buffer only with its value)
+        value = valid = None
+        if port.is_store:
+            vq = self.store_values.get(op_id)
+            if not vq or vq[0][0] > self.now:
+                return False
+            value, valid = vq[0][1], vq[0][2]
+
+        req_sched = port.req_sched()
+        req_addr = port.req_addr()
+        for pair in self.pairs_by_dst.get(op_id, ()):
+            if self.sequential and not pair.same_pe:
+                continue  # LSQ: cross-loop order enforced by instances
+            src_port = self.ports[pair.src]
+            use_next = (
+                self.forwarding and pair.kind == "RAW" and src_port.is_store
+            )
+            nodep = False
+            if pair.nodependence:
+                bits = self.nodep_bits.get((pair.dst, pair.src))
+                nodep = bool(bits[idx]) if bits is not None else False
+            explain = [] if self.oracle_loads is not None else None
+            if not dulib.check_pair(
+                pair, req_sched, req_addr, src_port, use_next, nodep, explain
+            ):
+                return False
+            if explain is not None:
+                self.issue_log[(op_id, idx)] = (
+                    self.issue_log.get((op_id, idx), [])
+                ) + explain
+
+        entry = dulib.PendingEntry(
+            req_idx=idx,
+            addr=req_addr,
+            sched=req_sched,
+            lastiter=port.req_lastiter(),
+        )
+        port.next += 1
+        port.pending.append(entry)
+        if self.sequential:
+            pass  # outstanding decremented at ACK
+        if port.is_store:
+            self.store_values[op_id].pop(0)
+            entry.value, entry.valid = value, valid
+            if valid:
+                self._enqueue_burst(port, entry)
+            else:
+                # Fig. 7: invalid stores skip DRAM; ACK at buffer head
+                self._post(self.now + 1, "invalid_ack", op_id)
+        else:
+            if not (self.forwarding and self._try_forward(op_id, entry)):
+                self._enqueue_burst(port, entry)
+        return True
+
+    def _try_forward(self, op_id: str, entry: dulib.PendingEntry) -> bool:
+        """§5.5 associative pending-buffer search, youngest match wins.
+        Only reached after the modified RAW check passed, so a miss means
+        the value is already committed to memory.
+
+        Qualification: only entries that precede the load in *program
+        order* may forward — a wrap-around source (e.g. next epoch's
+        store) legitimately running ahead must not satisfy this load.
+        """
+        best = None  # (sort key, entry, src op)
+        for pair in self.pairs_by_dst.get(op_id, ()):
+            if pair.kind != "RAW":
+                continue
+            sport = self.ports[pair.src]
+            k = pair.shared_depth
+            for e in sport.pending:
+                if e.addr != entry.addr or not e.valid:
+                    continue  # invalid entries never produce a value
+                # program-order qualification at the shared depth
+                if k > 0:
+                    es, rs = e.sched[k - 1], entry.sched[k - 1]
+                    before = es < rs or (es == rs and not pair.dst_before_src)
+                elif k == 0:
+                    before = not pair.dst_before_src
+                if not before:
+                    continue
+                key = (e.sched[k - 1] if k > 0 else 0, not pair.dst_before_src)
+                if best is None or key >= best[0]:
+                    best = (key, e, pair.src)
+        if best is not None:
+            _, e, src_op = best
+            entry.value = e.value
+            entry.forwarded = True
+            entry.fwd_src = (src_op, e.req_idx, tuple(e.sched))  # type: ignore
+            self.result.forwards += 1
+            self._post(
+                self.now + self.p.forward_latency, "fwd_ready", (op_id, entry)
+            )
+            return True
+        return False
+
+    # -- bursts -----------------------------------------------------------
+
+    def _enqueue_burst(self, port: dulib.Port, entry):
+        b = self.open_bursts.get(port.op_id)
+        if b is None or b.closed:
+            b = _Burst(port, self.now)
+            self.open_bursts[port.op_id] = b
+            self._post(self.now + self.p.burst_timeout, "burst_tick", port.op_id)
+        b.entries.append(entry)
+        if len(b.entries) >= self.burst_size:
+            self._close_burst(port.op_id, b)
+
+    def _close_burst(self, op_id: str, b: _Burst):
+        b.closed = True
+        issue = max(self.now, self.channel_free_at)
+        self.channel_free_at = issue + self.p.channel_occupancy
+        b.complete_at = issue + self.p.channel_occupancy + self.p.dram_latency
+        self.result.dram_bursts += 1
+        self.result.dram_requests += len(b.entries)
+        self._post(b.complete_at, "burst_done", (op_id, b))
+        if self.open_bursts.get(op_id) is b:
+            del self.open_bursts[op_id]
+
+    # -- events -----------------------------------------------------------
+
+    def _event(self, kind, payload):
+        if kind == "burst_done":
+            op_id, b = payload
+            port = b.port
+            arr = self.mem[self.comp.op_array[op_id]]
+            for e in b.entries:
+                if port.is_store:
+                    arr[e.addr] = e.value
+                else:
+                    e.value = float(arr[e.addr])
+                e.acked = True
+            self._ack_prefix(port)
+        elif kind == "burst_tick":
+            op_id = payload
+            b = self.open_bursts.get(op_id)
+            if (
+                b is not None
+                and not b.closed
+                and b.entries
+                and self.now - b.opened_at >= self.p.burst_timeout
+            ):
+                self._close_burst(op_id, b)
+        elif kind == "fwd_ready":
+            op_id, entry = payload
+            entry.acked = True
+            self._ack_prefix(self.ports[op_id])
+        elif kind == "invalid_ack":
+            self._ack_prefix(self.ports[payload])
+        elif kind == "cu_value":
+            op_id, value, valid = payload
+            self.store_values.setdefault(op_id, []).append(
+                (self.now, value, valid)
+            )
+        else:  # pragma: no cover
+            raise ValueError(kind)
+
+    def _ack_prefix(self, port: dulib.Port):
+        if (
+            self.oracle_loads is not None
+            and not port.is_store
+        ):
+            for e in port.pending:
+                if e.acked and not getattr(e, "checked", False):
+                    e.checked = True  # type: ignore[attr-defined]
+                    exp = self.oracle_loads[port.op_id][e.req_idx]
+                    if not np.isclose(e.value, exp, atol=1e-9):
+                        log = "\n  ".join(
+                            self.issue_log.get((port.op_id, e.req_idx), [])
+                        )
+                        fwd = getattr(e, "fwd_src", None)
+                        fwd_log = ""
+                        if fwd is not None:
+                            src_lines = self.issue_log.get((fwd[0], fwd[1]), [])
+                            fwd_log = (
+                                f"\n  forwarded from {fwd[0]}[{fwd[1]}] "
+                                f"sched={fwd[2]}:\n    " + "\n    ".join(src_lines)
+                            )
+                        raise AssertionError(
+                            f"HAZARD VIOLATION: {port.op_id}[{e.req_idx}] "
+                            f"addr={e.addr} got {e.value} expected {exp} "
+                            f"at cycle {self.now} sched={e.sched} "
+                            f"(forwarded={e.forwarded})\n  {log}{fwd_log}"
+                        )
+        while port.pending:
+            e = port.pending[0]
+            if not e.acked and e.valid is False:
+                # Fig. 7: a mis-speculated store reaching the head of the
+                # pending buffer ACKs without waiting for DRAM
+                e.acked = True
+            if not e.acked:
+                break
+            port.pending.pop(0)
+            port.update_ack(e)
+            if self.sequential:
+                r = self.req_inst[(port.op_id, e.req_idx)]
+                self.inst_outstanding[r] -= 1
+            if not port.is_store:
+                self.ready_loads.setdefault(port.op_id, []).append(e)
+
+    def _deliver(self, port: dulib.Port) -> bool:
+        ready = self.ready_loads.get(port.op_id)
+        if not ready:
+            return False
+        cu = self.cus[self.traces[port.op_id].pe_id]
+        progressed = False
+        while ready and cu.waiting_on == port.op_id:
+            e = ready.pop(0)
+            cu.feed(e.value, self.now)
+            self._drain_outbox(cu)
+            progressed = True
+        return progressed
+
+    def _drain_outbox(self, cu: _CU):
+        for op_id, v, valid in cu.outbox:
+            self.store_values.setdefault(op_id, [])
+            self._post(self.now + self.p.cu_latency, "cu_value", (op_id, v, valid))
+        cu.outbox.clear()
+
+    def _advance_window(self) -> bool:
+        progressed = False
+        while (
+            self.inst_window < len(self.inst_outstanding)
+            and self.inst_outstanding[self.inst_window] == 0
+        ):
+            self.inst_window += 1
+            progressed = True
+        return progressed
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def simulate(
+    program: ir.Program,
+    arrays: dict[str, np.ndarray],
+    params: Optional[dict[str, int]] = None,
+    mode: str = "FUS2",
+    sim: Optional[SimParams] = None,
+    validate: bool = False,
+) -> SimResult:
+    assert mode in ("STA", "LSQ", "FUS1", "FUS2")
+    params = params or {}
+    p = sim or SimParams()
+    comp = Compiled(program, forwarding=(mode == "FUS2"))
+    traces = schedlib.trace_program(program, comp.dae, arrays, params)
+    if mode == "STA":
+        return _simulate_sta(comp, traces, arrays, params, p)
+    eng = Engine(comp, traces, arrays, params, mode, p)
+    if validate:
+        oracle_loads: dict[str, list[float]] = {}
+
+        def hook(op_id, addr, is_store, valid, value):
+            if not is_store:
+                oracle_loads.setdefault(op_id, []).append(value)
+
+        ir.interpret(program, arrays, params, trace_hook=hook)
+        eng.oracle_loads = oracle_loads
+    return eng.run()

@@ -1,0 +1,54 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and re-shard.
+
+Checkpoints are topology-independent (full host arrays keyed by tree
+path), so elasticity is: (1) choose a new mesh shape from the available
+device count, (2) re-derive PartitionSpecs (they are symbolic, not
+device-count-bound), (3) device_put the restored state under the new
+NamedShardings, (4) re-partition the data stream (pipeline sharding is a
+pure function of (step, shard, n_shards)).
+
+``choose_mesh_shape`` prefers keeping the model axis at the largest
+divisor that still fits the architecture's head/expert counts — dropping
+data-parallel width first, which changes only throughput, never
+legality.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed import partition
+
+
+def choose_mesh_shape(n_devices: int, *, prefer_model: int = 16,
+                      max_model_divisor: int = 16) -> tuple[int, int]:
+    """(data, model) for an arbitrary surviving device count."""
+    model = min(prefer_model, max_model_divisor)
+    while model > 1 and n_devices % model != 0:
+        model //= 2
+    return n_devices // model, model
+
+
+def rebuild_mesh(devices=None, *, prefer_model: int = 16) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    data, model = choose_mesh_shape(len(devices), prefer_model=prefer_model)
+    dev = np.array(devices[: data * model]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))
+
+
+def reshard_state(state, mesh: Mesh):
+    """Re-shard a (restored, host-resident) state pytree onto ``mesh``
+    using the standard partitioning rules, with divisibility fixes for
+    the new axis sizes."""
+    params = state["params"] if isinstance(state, dict) and "params" in state else state
+    specs = partition.param_specs(params)
+    specs = partition.validate_divisibility(specs, params, mesh)
+    sh = partition.shardings_of(specs, mesh)
+    new_params = jax.tree.map(lambda a, s: jax.device_put(a, s), params, sh)
+    if isinstance(state, dict) and "params" in state:
+        out = dict(state)
+        out["params"] = new_params
+        return out
+    return new_params

@@ -1,0 +1,165 @@
+"""Pallas TPU kernels: blocked causal flash attention (prefill) and
+single-token decode attention over a KV cache.
+
+The decode path is the degenerate-but-ubiquitous instance of the paper's
+pattern in serving (DESIGN.md §3.2): append(store at t) / attend(load <=
+t) is a RAW pair whose store stream is trivially monotonic, so the
+frontier check collapses to causal masking — the kernel only ever looks
+at KV blocks below the frontier, never a history structure.
+
+Prefill: grid (batch*heads, q_blocks); each program streams KV blocks
+through VMEM with online softmax (running max/denominator), skipping
+fully-masked blocks. Block shapes keep the MXU aligned: q/kv blocks are
+multiples of 128 in production configs (tests use smaller tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, causal, sm_scale):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * sm_scale  # (block_q, d)
+    kv_len = k_ref.shape[1]
+    n_kb = kv_len // block_k
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0], (kb * block_k, 0), (block_k, k_ref.shape[2])
+        ).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0], (kb * block_k, 0), (block_k, v_ref.shape[2])
+        ).astype(jnp.float32)
+        s = q @ k.T  # (block_q, block_k)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    if causal:
+        # only blocks at or below the diagonal contribute
+        n_kb_eff = jnp.minimum(n_kb, (qi + 1) * block_q // block_k + 1)
+    else:
+        n_kb_eff = n_kb
+    d = v_ref.shape[2]
+    acc = jnp.zeros((block_q, d), jnp.float32)
+    m = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_kb_eff, body, (acc, m, l))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret", "sm_scale")
+)
+def flash_attention(
+    q: jax.Array,  # (BH, S, d)
+    k: jax.Array,  # (BH, S_kv, d)
+    v: jax.Array,  # (BH, S_kv, d)
+    *,
+    causal: bool = True,
+    sm_scale: float = 1.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, d = q.shape
+    s_kv = k.shape[1]
+    assert s % block_q == 0 and s_kv % block_k == 0
+    grid = (bh, s // block_q)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            block_q=block_q,
+            block_k=block_k,
+            causal=causal,
+            sm_scale=sm_scale,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s_kv, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s_kv, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, block_k, sm_scale):
+    q = q_ref[0].astype(jnp.float32) * sm_scale  # (1, d)
+    kv_len = len_ref[0]  # frontier: number of committed KV entries
+    s_kv = k_ref.shape[1]
+    n_kb = s_kv // block_k
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0], (kb * block_k, 0), (block_k, k_ref.shape[2])
+        ).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0], (kb * block_k, 0), (block_k, v_ref.shape[2])
+        ).astype(jnp.float32)
+        s = (q @ k.T)[0]  # (block_k,)
+        pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(pos < kv_len, s, NEG_INF)  # RAW frontier mask
+        m_new = jnp.maximum(m, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p)
+        acc_new = acc * alpha + p @ v
+        return acc_new, m_new, l_new
+
+    d = v_ref.shape[2]
+    acc = jnp.zeros((d,), jnp.float32)
+    carry = (acc, jnp.float32(NEG_INF), jnp.float32(0.0))
+    acc, m, l = jax.lax.fori_loop(0, n_kb, body, carry)
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30))[None, :].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret", "sm_scale"))
+def decode_attention(
+    q: jax.Array,       # (BH, 1, d) one new token per head
+    k_cache: jax.Array,  # (BH, S_max, d)
+    v_cache: jax.Array,  # (BH, S_max, d)
+    lengths: jax.Array,  # (BH,) committed KV frontier per head
+    *,
+    sm_scale: float = 1.0,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, _, d = q.shape
+    s_max = k_cache.shape[1]
+    assert s_max % block_k == 0
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=block_k, sm_scale=sm_scale),
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, s_max, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, s_max, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, lengths.astype(jnp.int32))

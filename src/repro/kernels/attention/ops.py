@@ -1,0 +1,19 @@
+"""Public attention wrappers used by the model stack.
+
+On TPU the Pallas kernels are the production path; on CPU (this
+container) the models call the jnp references, and tests validate the
+kernels in interpret mode at reduced sizes.
+"""
+
+from repro.kernels.attention.kernel import decode_attention, flash_attention
+from repro.kernels.attention.ref import (
+    decode_attention_ref,
+    flash_attention_ref,
+)
+
+__all__ = [
+    "flash_attention",
+    "flash_attention_ref",
+    "decode_attention",
+    "decode_attention_ref",
+]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the attention kernels."""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, sm_scale=1.0):
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    if causal:
+        ql, kl = q.shape[1], k.shape[1]
+        mask = jnp.arange(ql)[:, None] >= jnp.arange(kl)[None, :]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, sm_scale=1.0):
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * sm_scale
+    pos = jnp.arange(k_cache.shape[1])
+    mask = pos[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v_cache.astype(jnp.float32)).astype(
+        q.dtype
+    )

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: CSR SpMV over a block-padded (ELL) layout.
+
+Substrate for the paper's matpower / tanh+spmv benchmarks and the
+sparse half of the bnn code. The CSR column stream is monotone within
+each row (§3.3) — ops.py converts CSR to a dense-padded ELL block
+layout on the host (the static analogue of the DU's burst coalescing:
+every gather touches a dense, aligned tile instead of issuing per-element
+requests).
+
+Grid: one program per row block; x is resident in VMEM (sizes here are
+benchmark-scale; a production kernel would tile x with a second grid
+dimension and accumulate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    cols = cols_ref[...]  # (block_r, width)
+    vals = vals_ref[...].astype(jnp.float32)
+    x = x_ref[...]
+    gathered = jnp.take(x, cols, mode="clip").astype(jnp.float32)
+    y_ref[...] = jnp.sum(vals * gathered, axis=1).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def csr_spmv(
+    cols: jax.Array,  # (N_pad, W) int32, padded col indices (pad -> 0 val)
+    vals: jax.Array,  # (N_pad, W) f32, zeros at padding
+    x: jax.Array,     # (M,) f32
+    *,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    n_pad, w = cols.shape
+    assert n_pad % block_r == 0
+    grid = (n_pad // block_r,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, w), lambda i: (i, 0)),
+            pl.BlockSpec((x.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), x.dtype),
+        interpret=interpret,
+    )(cols.astype(jnp.int32), vals, x)

@@ -1,0 +1,23 @@
+"""Public csr_spmv wrappers."""
+
+import numpy as np
+
+from repro.kernels.csr_spmv.kernel import csr_spmv
+from repro.kernels.csr_spmv.ref import csr_spmv_ref, csr_to_ell
+
+__all__ = ["csr_spmv", "csr_spmv_ref", "csr_to_ell", "spmv_from_csr"]
+
+
+def spmv_from_csr(row_ptr, col_idx, values, x, *, block_r=128, interpret=False,
+                  use_kernel=True):
+    """End-to-end y = A @ x from CSR inputs."""
+    n_rows = len(row_ptr) - 1
+    cols, vals = csr_to_ell(
+        np.asarray(row_ptr), np.asarray(col_idx), np.asarray(values),
+        n_rows, block_r,
+    )
+    if use_kernel:
+        y = csr_spmv(cols, vals, x, block_r=block_r, interpret=interpret)
+    else:
+        y = csr_spmv_ref(cols, vals, x)
+    return y[:n_rows]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for csr_spmv."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def csr_spmv_ref(cols, vals, x):
+    g = jnp.take(x, cols.astype(jnp.int32), mode="clip").astype(jnp.float32)
+    return jnp.sum(vals.astype(jnp.float32) * g, axis=1).astype(x.dtype)
+
+
+def csr_to_ell(row_ptr: np.ndarray, col_idx: np.ndarray, values: np.ndarray,
+               n_rows: int, block_r: int = 128):
+    """Host-side CSR -> padded ELL conversion (ops.py layout pass)."""
+    width = max(1, int(np.max(row_ptr[1:] - row_ptr[:-1])))
+    n_pad = -(-n_rows // block_r) * block_r
+    cols = np.zeros((n_pad, width), dtype=np.int32)
+    vals = np.zeros((n_pad, width), dtype=np.float32)
+    for r in range(n_rows):
+        lo, hi = row_ptr[r], row_ptr[r + 1]
+        cols[r, : hi - lo] = col_idx[lo:hi]
+        vals[r, : hi - lo] = values[lo:hi]
+    return cols, vals

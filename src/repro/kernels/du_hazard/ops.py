@@ -1,0 +1,32 @@
+"""Public jit'd wrappers for the du_hazard kernel.
+
+``hazard_frontier`` — Pallas kernel (TPU target; interpret=True on CPU).
+``hazard_frontier_ref`` — pure-jnp oracle.
+``wave_partition`` — composition used by the fused executor / MoE path:
+given per-pair frontiers, assign each consumer request the earliest wave
+in which all its producers have committed.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.du_hazard.kernel import hazard_frontier
+from repro.kernels.du_hazard.ref import hazard_frontier_ref
+
+__all__ = ["hazard_frontier", "hazard_frontier_ref", "wave_partition"]
+
+
+@jax.jit
+def wave_partition(frontiers: jax.Array, src_waves: jax.Array) -> jax.Array:
+    """Given each dst's required src commit count (``frontiers``, from
+    hazard_frontier) and the wave index of every src request, the wave of
+    each dst = 1 + wave of its last required producer (0 if none).
+
+    This is the TPU replacement for per-cycle DU stalling: the stall
+    condition becomes an index computation (DESIGN.md §2, "stalling →
+    partitioning")."""
+    last = jnp.maximum(frontiers - 1, 0)
+    producer_wave = jnp.where(
+        frontiers > 0, jnp.take(src_waves, last, mode="clip"), -1
+    )
+    return producer_wave + 1

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the du_hazard kernel."""
+
+import jax.numpy as jnp
+
+
+def hazard_frontier_ref(src_addr, dst_addr):
+    """Number of src requests with address <= each dst address.
+
+    Requires src_addr monotonically non-decreasing — then this equals
+    searchsorted(src, dst, 'right'), i.e. the minimal safe frontier of
+    the paper's address disjunct.
+    """
+    return jnp.searchsorted(
+        src_addr.astype(jnp.int32), dst_addr.astype(jnp.int32), side="right"
+    ).astype(jnp.int32)

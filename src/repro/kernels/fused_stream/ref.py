@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for fused_stream (store-to-load forwarding)."""
+
+import jax.numpy as jnp
+
+
+def fused_stream_ref(src_addr, src_val, frontier, dst_addr, memory):
+    """Youngest producer before the frontier with matching address
+    forwards; otherwise read memory. Requires monotonic src_addr (the
+    youngest same-address producer below the frontier is at index
+    frontier-1)."""
+    f = frontier.astype(jnp.int32)
+    a = dst_addr.astype(jnp.int32)
+    last = jnp.maximum(f - 1, 0)
+    cand_addr = jnp.take(src_addr.astype(jnp.int32), last, mode="clip")
+    cand_val = jnp.take(src_val, last, mode="clip")
+    hit = (f > 0) & (cand_addr == a)
+    return jnp.where(hit, cand_val, jnp.take(memory, a, mode="clip")), hit

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: fused histogram (hist+add benchmark substrate).
+
+A histogram's store stream (hist[d[i]] += 1) is data-dependent and
+non-monotonic — the paper's hardest case, where the DU falls back to
+sentinels. The TPU adaptation sidesteps the hazard entirely by
+re-associating the reduction: each data block produces a *private*
+bincount tile in VMEM (broadcast-compare + row sum), accumulated across
+the sequential grid — no read-modify-write hazard ever reaches memory.
+This is the "re-associate instead of disambiguate" escape hatch noted in
+DESIGN.md §8 for non-monotonic reductions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(data_ref, out_ref, *, n_bins):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    d = data_ref[...]  # (block,)
+    bins = jax.lax.iota(jnp.int32, n_bins)
+    counts = jnp.sum(
+        (d[None, :] == bins[:, None]).astype(jnp.float32), axis=1
+    )
+    out_ref[...] += counts.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block", "interpret"))
+def histogram(
+    data: jax.Array,  # (N,) int32 bin indices
+    *,
+    n_bins: int,
+    block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    n = data.shape[0]
+    pad = -n % block
+    d = jnp.pad(data.astype(jnp.int32), (0, pad), constant_values=-1)
+    grid = (d.shape[0] // block,)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, n_bins=n_bins),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((n_bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.float32),
+        interpret=interpret,
+    )(d)

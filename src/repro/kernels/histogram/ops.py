@@ -1,0 +1,22 @@
+"""Public histogram wrappers (hist+add benchmark: two fused histograms
+plus the addition loop, all waves in one pass)."""
+
+import jax.numpy as jnp
+
+from repro.kernels.histogram.kernel import histogram
+from repro.kernels.histogram.ref import histogram_ref
+
+__all__ = ["histogram", "histogram_ref", "hist_add"]
+
+
+def hist_add(d1, d2, *, n_bins, interpret=False, use_kernel=True):
+    """The full hist+add benchmark, dynamically fused: both histograms
+    and the addition execute as one fused program (the FUS2 pipeline of
+    paper Table 1)."""
+    f = histogram if use_kernel else histogram_ref
+    kw = dict(n_bins=n_bins)
+    if use_kernel:
+        kw["interpret"] = interpret
+    h1 = f(d1, **kw)
+    h2 = f(d2, **kw)
+    return h1 + h2

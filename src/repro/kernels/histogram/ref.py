@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the histogram kernel."""
+
+import jax.numpy as jnp
+
+
+def histogram_ref(data, *, n_bins):
+    return jnp.zeros((n_bins,), jnp.float32).at[data].add(
+        jnp.where(data >= 0, 1.0, 0.0)
+    )

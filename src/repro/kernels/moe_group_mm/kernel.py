@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: grouped expert matmul over a monotonic dispatch
+stream (DESIGN.md §3.1 — the LM-framework integration of the paper).
+
+After a stable sort of token -> expert assignments the expert-id stream
+is monotonically non-decreasing: the *same* property the paper's §3.3
+asserts for CSR index streams. Dispatch(store) -> expert-FFN(compute) ->
+combine(load) is a cross-loop RAW chain; its hazard frontier is the
+per-expert offset table (one searchsorted — see du_hazard), after which
+the fused execution is a block-diagonal grouped matmul.
+
+TPU mapping (MegaBlocks-style): tokens are sorted and padded so every
+row block belongs to exactly one expert; the expert id per block is a
+*scalar-prefetch* operand, so each grid step streams exactly one
+expert's weight tile HBM->VMEM (the analogue of the DU coalescing one
+burst per dependent group). Block sizes keep the MXU shape-aligned
+(multiples of 128 on the contracting/output dims in production; tests
+use smaller tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(block_expert_ref, x_ref, w_ref, o_ref):
+    # x_ref: (block_t, d_in); w_ref: (1, d_in, d_out) for this block's expert
+    x = x_ref[...]
+    w = w_ref[0]
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "interpret")
+)
+def group_matmul(
+    x_sorted: jax.Array,      # (T_pad, d_in) tokens sorted by expert, padded
+    w: jax.Array,             # (E, d_in, d_out) expert weights
+    block_expert: jax.Array,  # (T_pad // block_t,) int32 expert id per block
+    *,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Block-diagonal grouped matmul: out[t] = x[t] @ w[expert_of(t)].
+
+    ``x_sorted`` must be padded so each ``block_t`` row block maps to a
+    single expert (ops.py builds this from the monotonic dispatch
+    stream). Padding rows multiply into garbage that ops.py drops.
+    """
+    t_pad, d_in = x_sorted.shape
+    d_out = w.shape[2]
+    assert t_pad % block_t == 0
+    grid = (t_pad // block_t,)
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_t, d_in), lambda i, be: (i, 0)),
+                # stream exactly this block's expert weight tile
+                pl.BlockSpec((1, d_in, d_out), lambda i, be: (be[i], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_t, d_out), lambda i, be: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((t_pad, d_out), x_sorted.dtype),
+        interpret=interpret,
+    )(block_expert, x_sorted, w)

@@ -1,0 +1,126 @@
+"""Monotonic MoE dispatch/combine built on the grouped matmul kernel.
+
+``monotonic_dispatch`` turns (tokens, router top-k assignments) into the
+sorted/padded layout the kernel needs — the compiler-side counterpart of
+the paper's §3.3 assertion: after the stable sort the expert stream is
+monotone, so per-expert offsets come from one frontier merge
+(searchsorted == du_hazard), not a history search.
+
+``moe_ffn`` is the full dropless expert-FFN layer used by the MoE
+architectures (phi3.5-moe, moonshot). It is pure JAX except the
+block-diagonal matmuls, which route through the Pallas kernel on TPU
+(``use_kernel=True``) or an identical-semantics jnp path on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_group_mm.kernel import group_matmul
+from repro.kernels.moe_group_mm.ref import group_matmul_ref
+
+__all__ = ["monotonic_dispatch", "group_matmul", "group_matmul_ref", "moe_ffn"]
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "block_t"))
+def monotonic_dispatch(expert_ids: jax.Array, n_experts: int, block_t: int):
+    """Sort the (flattened) token->expert stream into monotonic order and
+    pad each expert group to a multiple of block_t.
+
+    Returns (perm, inv_positions, block_expert, group_sizes, slot_of_assignment)
+    where ``slot_of_assignment[a]`` is the padded row of assignment a.
+    """
+    n = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)  # monotonic expert stream
+    sorted_e = jnp.take(expert_ids, order)
+    # per-expert sizes via the frontier merge (searchsorted on the
+    # monotonic stream — same primitive as kernels/du_hazard)
+    bounds = jnp.searchsorted(
+        sorted_e, jnp.arange(n_experts + 1, dtype=expert_ids.dtype), side="left"
+    )
+    sizes = bounds[1:] - bounds[:-1]
+    padded_sizes = ((sizes + block_t - 1) // block_t) * block_t
+    padded_offsets = jnp.concatenate(
+        [jnp.zeros((1,), sizes.dtype), jnp.cumsum(padded_sizes)]
+    )
+    # slot of the i-th sorted assignment inside the padded layout
+    rank_within = jnp.arange(n) - jnp.take(bounds, sorted_e)
+    slot_sorted = jnp.take(padded_offsets, sorted_e) + rank_within
+    slot_of_assignment = jnp.zeros((n,), dtype=jnp.int32).at[order].set(
+        slot_sorted.astype(jnp.int32)
+    )
+    t_pad = int(padded_offsets[-1]) if False else None  # dynamic; see ops
+    n_blocks_per_e = padded_sizes // block_t
+    # block -> expert map (static length: worst case n//block_t + n_experts)
+    max_blocks = n // block_t + n_experts
+    block_starts = jnp.concatenate(
+        [jnp.zeros((1,), sizes.dtype), jnp.cumsum(n_blocks_per_e)]
+    )
+    block_ids = jnp.arange(max_blocks)
+    block_expert = (
+        jnp.searchsorted(block_starts, block_ids, side="right") - 1
+    ).astype(jnp.int32)
+    block_expert = jnp.clip(block_expert, 0, n_experts - 1)
+    return order, slot_of_assignment, block_expert, sizes, padded_offsets
+
+
+def moe_ffn(
+    x: jax.Array,          # (T, d_model) flattened tokens
+    router_logits: jax.Array,  # (T, E)
+    w_in: jax.Array,       # (E, d_model, d_ff)
+    w_gate: jax.Array,     # (E, d_model, d_ff) or None (non-gated)
+    w_out: jax.Array,      # (E, d_ff, d_model)
+    *,
+    top_k: int,
+    use_kernel: bool = False,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Dropless top-k MoE FFN with monotonic dispatch.
+
+    The dispatch->compute->combine chain is the paper's cross-loop RAW
+    pattern; monotonicity (post-sort) lets every stage run fused without
+    capacity drops or history searches.
+    """
+    t, d_model = x.shape
+    n_experts = router_logits.shape[-1]
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    flat_e = top_e.reshape(-1).astype(jnp.int32)  # (T*k,)
+    n = flat_e.shape[0]
+    order, slot, block_expert, sizes, padded_offsets = monotonic_dispatch(
+        flat_e, n_experts, block_t
+    )
+    t_pad = (n // block_t + n_experts) * block_t  # static upper bound
+
+    token_of_assignment = jnp.arange(n) // top_k
+    x_sorted = jnp.zeros((t_pad, d_model), x.dtype).at[slot].set(
+        x[token_of_assignment]
+    )
+
+    def mm(a, w):
+        if use_kernel:
+            return group_matmul(
+                a, w, block_expert, block_t=block_t, interpret=interpret
+            )
+        return group_matmul_ref(a, w, block_expert, block_t=block_t)
+
+    h = mm(x_sorted, w_in)
+    if w_gate is not None:
+        h = jax.nn.silu(mm(x_sorted, w_gate)) * h
+    else:
+        h = jax.nn.gelu(h)
+    y_sorted = mm(h.astype(x.dtype), w_out)
+
+    # combine (the RAW "load" side): gather each assignment's row and
+    # weight by router prob
+    y_assign = jnp.take(y_sorted, slot, axis=0)
+    w_assign = top_p.reshape(-1)[:, None].astype(y_assign.dtype)
+    out = jnp.zeros((t, d_model), y_assign.dtype)
+    out = out.at[token_of_assignment].add(y_assign * w_assign)
+    return out.astype(x.dtype)

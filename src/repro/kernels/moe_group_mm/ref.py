@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the grouped matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def group_matmul_ref(x_sorted, w, block_expert, *, block_t: int = 128):
+    """out[t] = x[t] @ w[expert_of_block(t // block_t)], computed with a
+    plain gather of per-block weights — identical semantics to the Pallas
+    kernel, used as the CPU path and the allclose oracle."""
+    t_pad, d_in = x_sorted.shape
+    n_blocks = t_pad // block_t
+    xb = x_sorted.reshape(n_blocks, block_t, d_in)
+    wb = jnp.take(w, block_expert[:n_blocks], axis=0)  # (n_blocks, d_in, d_out)
+    out = jnp.einsum(
+        "bti,bio->bto", xb.astype(jnp.float32), wb.astype(jnp.float32)
+    )
+    return out.reshape(t_pad, -1).astype(x_sorted.dtype)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused Mamba-1 selective-scan chunk.
+
+The §Perf Cell-A analysis (EXPERIMENTS.md) shows the SSM memory term is
+dominated by per-position (B, di, n) intermediates hitting HBM in the
+pure-JAX chunked scan. This kernel is the production fix: one grid step
+processes a whole (chunk, di-block) tile with the recurrence state, the
+projections, and every intermediate resident in VMEM — HBM traffic
+collapses to the xi/dt/B/C inputs and the y output, once each.
+
+Grid: (di_blocks, n_chunks). The chunk axis is the paper's monotonic RAW
+frontier (DESIGN.md §3.3): chunk c+1 *loads* the state chunk c *stored*
+— realized here by accumulating the carried state in a VMEM scratch
+that lives across the (sequential) grid steps of one di-block row.
+
+Layout notes for the MXU/VPU: di is tiled in multiples of 128 (lane
+dim); the state expansion n (16 for falcon-mamba) rides the sublane dim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(xi_ref, dt_ref, b_ref, c_ref, a_neg_ref, y_ref, h_scratch,
+                 *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    xi = xi_ref[...].astype(jnp.float32)      # (C, bd)
+    dt = dt_ref[...].astype(jnp.float32)      # (C, bd)
+    bmat = b_ref[...].astype(jnp.float32)     # (C, n)
+    cmat = c_ref[...].astype(jnp.float32)     # (C, n)
+    a_neg = a_neg_ref[...].astype(jnp.float32)  # (bd, n)
+
+    def pos_step(t, carry):
+        h = carry  # (bd, n)
+        a_t = jnp.exp(a_neg * dt[t][:, None])           # (bd, n)
+        bx_t = (dt[t] * xi[t])[:, None] * bmat[t][None, :]
+        h_new = a_t * h + bx_t
+        y_t = jnp.sum(h_new * cmat[t][None, :], axis=1)  # (bd,)
+        y_ref[t, :] = y_t.astype(y_ref.dtype)
+        return h_new
+
+    h = jax.lax.fori_loop(0, chunk, pos_step, h_scratch[...])
+    h_scratch[...] = h  # the chunk-final state: the §3.3 RAW frontier
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_d", "interpret")
+)
+def ssm_scan(
+    xi: jax.Array,     # (S, di) post-conv/silu activations (one sample)
+    dt: jax.Array,     # (S, di) softplus'd step sizes
+    bmat: jax.Array,   # (S, n) input projections
+    cmat: jax.Array,   # (S, n) output projections
+    a_neg: jax.Array,  # (di, n) negative decay rates (-exp(a_log))
+    *,
+    chunk: int = 128,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[t, d] = sum_n C[t,n] * h[t, d, n] with
+    h[t] = exp(a_neg * dt[t]) * h[t-1] + dt[t] * x[t] * B[t].
+
+    Returns y (S, di). Batch is handled by vmap in ops.py.
+    """
+    s, di = xi.shape
+    n = bmat.shape[1]
+    assert s % chunk == 0 and di % block_d == 0, (s, chunk, di, block_d)
+    grid = (di // block_d, s // chunk)
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, block_d), lambda d, c: (c, d)),  # xi
+            pl.BlockSpec((chunk, block_d), lambda d, c: (c, d)),  # dt
+            pl.BlockSpec((chunk, n), lambda d, c: (c, 0)),        # B
+            pl.BlockSpec((chunk, n), lambda d, c: (c, 0)),        # C
+            pl.BlockSpec((block_d, n), lambda d, c: (d, 0)),      # a_neg
+        ],
+        out_specs=pl.BlockSpec((chunk, block_d), lambda d, c: (c, d)),
+        out_shape=jax.ShapeDtypeStruct((s, di), xi.dtype),
+        # carried recurrence state, resident in VMEM across the chunk axis
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(xi, dt, bmat, cmat, a_neg)

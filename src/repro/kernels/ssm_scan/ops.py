@@ -1,0 +1,25 @@
+"""Public wrappers for the fused Mamba selective-scan kernel.
+
+``ssm_scan_batched`` vmaps the per-sample kernel over the batch; the
+model's jnp path (models/ssm._mamba1_chunked) stays the SPMD-lowering
+path for the dry-run, and this kernel is the TPU execution answer to
+the SSM memory-term caveat in EXPERIMENTS.md §Perf Cell A.
+"""
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+__all__ = ["ssm_scan", "ssm_scan_ref", "ssm_scan_batched"]
+
+
+def ssm_scan_batched(xi, dt, bmat, cmat, a_neg, *, chunk=128, block_d=512,
+                     interpret=False):
+    """xi/dt: (B, S, di); bmat/cmat: (B, S, n); a_neg: (di, n)."""
+    return jax.vmap(
+        lambda x_, d_, b_, c_: ssm_scan(
+            x_, d_, b_, c_, a_neg, chunk=chunk, block_d=block_d,
+            interpret=interpret,
+        )
+    )(xi, dt, bmat, cmat)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the ssm_scan kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(xi, dt, bmat, cmat, a_neg):
+    """Sequential recurrence, identical math to models/ssm._mamba1_step."""
+    def step(h, inputs):
+        xi_t, dt_t, b_t, c_t = inputs
+        a_t = jnp.exp(a_neg * dt_t[:, None])
+        bx_t = (dt_t * xi_t)[:, None] * b_t[None, :]
+        h_new = a_t * h + bx_t
+        y_t = jnp.sum(h_new * c_t[None, :], axis=1)
+        return h_new, y_t
+
+    di, n = a_neg.shape
+    h0 = jnp.zeros((di, n), jnp.float32)
+    _, y = jax.lax.scan(
+        step, h0,
+        (xi.astype(jnp.float32), dt.astype(jnp.float32),
+         bmat.astype(jnp.float32), cmat.astype(jnp.float32)),
+    )
+    return y.astype(xi.dtype)

@@ -1,0 +1,174 @@
+"""Compiled-artifact analysis: roofline terms from the dry-run.
+
+Hardware constants (assignment-specified, TPU v5e-like):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms per (arch, shape, mesh):
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = per-device collective bytes (parsed from optimized HLO) / link_bw
+
+Collective byte conventions (ring-algorithm bytes per device):
+  all-gather       out * (g-1)/g
+  all-reduce       2 * out * (g-1)/g
+  reduce-scatter   out * (g-1)          (input = g * out)
+  all-to-all       out * (g-1)/g
+  collective-permute  out
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DT_SIZE = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = {
+    "all-gather": lambda out, g: out * (g - 1) / max(g, 1),
+    "all-reduce": lambda out, g: 2 * out * (g - 1) / max(g, 1),
+    "reduce-scatter": lambda out, g: out * (g - 1),
+    "all-to-all": lambda out, g: out * (g - 1) / max(g, 1),
+    "collective-permute": lambda out, g: out,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DT_SIZE:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DT_SIZE[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        return max(1, len([x for x in first.replace("{", "").split(",") if x.strip() != ""]))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective bytes by op kind, from optimized HLO."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        for op, fn in _COLLECTIVES.items():
+            # match the op applied as instruction (e.g. "all-reduce(")
+            m = re.search(rf"\b{op}(?:-start|-done)?\(", rhs)
+            if not m:
+                continue
+            if op == "all-gather" and "all-gather-done" in rhs:
+                continue  # done ops carry no new bytes
+            if op == "all-reduce" and "all-reduce-done" in rhs:
+                continue
+            if op == "collective-permute" and "collective-permute-done" in rhs:
+                continue
+            # output shapes: everything before the op name
+            out_bytes = _shape_bytes(rhs[: m.start()])
+            g = _group_size(rhs)
+            out[op] += fn(out_bytes, g)
+            counts[op] += 1
+            break
+    total = sum(out.values())
+    return {"per_op": out, "counts": counts, "total_bytes": total}
+
+
+def roofline(compiled, n_devices: int, model_flops_per_device: float = 0.0):
+    """All three terms + dominant classification from a compiled exe.
+
+    FLOPs/bytes/collectives come from the while-trip-aware HLO cost
+    model (launch/hlo_cost.py) — XLA's own cost_analysis counts loop
+    bodies once (verified) and is recorded only as a reference field.
+    """
+    from repro.launch import hlo_cost
+
+    my = hlo_cost.cost_from_compiled(compiled)
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0]
+
+    flops = float(my["flops"])
+    bytes_accessed = float(my["bytes"])
+    coll_total = float(my["collective_bytes"])
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = coll_total / LINK_BW
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    util = t_compute / bound if bound > 0 else 0.0
+    out = {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "hlo_flops_per_device": flops,
+        "hlo_flops_elementwise": float(my["flops_elementwise"]),
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_total,
+        "collective_per_op": my["collective_per_op"],
+        "xla_cost_analysis_flops": float(xla_cost.get("flops", 0.0)),
+        "roofline_fraction": util,  # compute-time share of the bound
+    }
+    if model_flops_per_device:
+        out["model_flops_per_device"] = model_flops_per_device
+        out["useful_flops_ratio"] = model_flops_per_device / max(flops, 1.0)
+    return out
+
+
+def memory_report(compiled) -> dict:
+    m = compiled.memory_analysis()
+    keys = [
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ]
+    rep = {}
+    for k in keys:
+        v = getattr(m, k, None)
+        if v is not None:
+            rep[k] = int(v)
+    args = rep.get("argument_size_in_bytes", 0)
+    alias = rep.get("alias_size_in_bytes", 0)
+    rep["peak_bytes_per_device_est"] = (
+        args + rep.get("temp_size_in_bytes", 0)
+        + rep.get("output_size_in_bytes", 0) - alias
+    )
+    return rep
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training (fwd+bwd), 2·N·D for inference,
+    with N = active params (MoE-aware)."""
+    n = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n * tokens)

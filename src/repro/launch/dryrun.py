@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import (jax locks the
+# device count on first initialization). Everything else follows.
+
+import argparse  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import base as configs  # noqa: E402
+from repro.distributed import partition  # noqa: E402
+from repro.launch import analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.shapes import SHAPES, applicable  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.models import layers as L  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, prove memory fits, and extract roofline terms.
+
+For every cell this lowers the REAL step function (train_step with
+AdamW, prefill, or serve_step) against ShapeDtypeStruct inputs — no
+allocation — with the full 2D/3D sharding rules, then:
+
+    compiled = jax.jit(step, in_shardings=..., out_shardings=...)\
+        .lower(*specs).compile()
+    compiled.memory_analysis()   # proves it fits per device
+    compiled.cost_analysis()     # FLOPs/bytes for the roofline
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline table in EXPERIMENTS.md is generated from those files by
+benchmarks/roofline.py.
+"""
+
+DT = L.Dtypes(param=jnp.bfloat16, compute=jnp.bfloat16, accum=jnp.float32)
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape, mesh, dt=DT):
+    """ShapeDtypeStruct stand-ins + NamedShardings for one cell.
+
+    Returns (args tuple, in_shardings tuple, out_shardings, donate)."""
+    key_s = _struct((2,), jnp.uint32)
+    params_s = jax.eval_shape(lambda k: T.init_params(k, cfg, dt), key_s)
+    pspecs = partition.validate_divisibility(
+        partition.param_specs(params_s), params_s, mesh
+    )
+    p_sh = partition.shardings_of(pspecs, mesh)
+    long_ctx = shape.name == "long_500k"
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    if shape.kind == "train":
+        opt_s = jax.eval_shape(adamw.init_state, params_s)
+        ospecs = partition.validate_divisibility(
+            {"m": pspecs, "v": pspecs, "step": P()}, opt_s, mesh
+        )
+        o_sh = partition.shardings_of(ospecs, mesh)
+        batch = {
+            "tokens": _struct((shape.global_batch, shape.seq_len), jnp.int32),
+            "targets": _struct((shape.global_batch, shape.seq_len), jnp.int32),
+        }
+        b_sh = {
+            "tokens": NamedSharding(mesh, P(dp, None)),
+            "targets": NamedSharding(mesh, P(dp, None)),
+        }
+        if cfg.frontend:
+            batch["frontend"] = _struct(
+                (shape.global_batch, cfg.frontend_len, cfg.d_model), dt.compute
+            )
+            b_sh["frontend"] = NamedSharding(mesh, P(dp, None, None))
+        args = (params_s, opt_s, batch)
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh, None)
+        return args, in_sh, out_sh, (0, 1)
+
+    if shape.kind == "prefill":
+        batch = {
+            "tokens": _struct((shape.global_batch, shape.seq_len), jnp.int32)
+        }
+        b_sh = {"tokens": NamedSharding(mesh, P(dp, None))}
+        if cfg.frontend:
+            batch["frontend"] = _struct(
+                (shape.global_batch, cfg.frontend_len, cfg.d_model), dt.compute
+            )
+            b_sh["frontend"] = NamedSharding(mesh, P(dp, None, None))
+        args = (params_s, batch)
+        in_sh = (p_sh, b_sh)
+        # output cache must be sharded like the decode cache it feeds —
+        # unconstrained, XLA replicates it (measured: internvl2 prefill
+        # at 352 GiB/device before the fix)
+        cache_s = jax.eval_shape(
+            lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len, dt)
+        )
+        cspecs = partition.validate_divisibility(
+            partition.cache_specs(cache_s, mesh, long_context=False),
+            cache_s, mesh,
+        )
+        out_sh = (None, partition.shardings_of(cspecs, mesh))
+        return args, in_sh, out_sh, ()
+
+    # decode: one new token against a seq_len-deep cache
+    b = shape.global_batch
+    cache_s = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, shape.seq_len, dt)
+    )
+    cspecs = partition.validate_divisibility(
+        partition.cache_specs(cache_s, mesh, long_context=long_ctx),
+        cache_s, mesh,
+    )
+    c_sh = partition.shardings_of(cspecs, mesh)
+    tokens = _struct((b, 1), jnp.int32)
+    lengths = _struct((b,), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(dp, None) if not long_ctx else P(None, None))
+    len_sh = NamedSharding(mesh, P(dp) if not long_ctx else P(None))
+    args = [params_s, tokens, cache_s, lengths]
+    in_sh = [p_sh, tok_sh, c_sh, len_sh]
+    if cfg.enc_dec:
+        enc = _struct((b, cfg.frontend_len, cfg.d_model), dt.compute)
+        args.append(enc)
+        in_sh.append(NamedSharding(mesh, P(dp, None, None) if not long_ctx else P(None, None, None)))
+    else:
+        args.append(None)
+        in_sh.append(None)
+    out_sh = (None, c_sh, None)
+    return tuple(args), tuple(in_sh), out_sh, (2,)
+
+
+def lower_cell(cfg, shape, mesh, dt=DT):
+    """Lower + compile one (arch, shape, mesh) cell. Returns results dict."""
+    from repro.models import shardctx
+
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    shardctx.set_mesh_ctx(mesh, dp)
+    if shape.kind == "train":
+        # Megatron-SP at layer boundaries: batch over data, seq over model
+        T.set_activation_sharding(NamedSharding(mesh, P(dp, "model", None)))
+    else:
+        T.set_activation_sharding(None)
+    args, in_sh, out_sh, donate = input_specs(cfg, shape, mesh, dt)
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        fn = steps_lib.make_train_step(cfg, opt_cfg, dt)
+    elif shape.kind == "prefill":
+        fn = steps_lib.make_prefill_step(cfg, dt, max_seq=shape.seq_len)
+    else:
+        fn = steps_lib.make_serve_step(cfg, dt)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        donate_argnums=donate,
+    )
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    n_dev = mesh.devices.size
+    mf = analysis.model_flops(cfg, shape) / n_dev
+    roof = analysis.roofline(compiled, n_dev, model_flops_per_device=mf)
+    mem = analysis.memory_report(compiled)
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_devices": n_dev,
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        "memory": mem,
+        "roofline": roof,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             dt=DT) -> dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_tag}"
+    if not ok:
+        res = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "skipped": why}
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        try:
+            res = lower_cell(cfg, shape, mesh, dt)
+        except Exception as e:  # noqa: BLE001 — recorded, surfaced by caller
+            res = {
+                "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        with open(os.path.join(outdir, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=1, default=float)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="16x16", choices=["16x16", "2x16x16", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = configs.all_names() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = (
+        [False, True] if args.mesh == "both" else [args.mesh == "2x16x16"]
+    )
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                res = run_cell(arch, shape_name, mp, args.out)
+                dt_s = time.time() - t0
+                if "error" in res:
+                    failures += 1
+                    status = "ERROR " + res["error"][:120]
+                elif "skipped" in res:
+                    status = res["skipped"]
+                else:
+                    r = res["roofline"]
+                    status = (
+                        f"ok compute={r['compute_s']*1e3:.1f}ms "
+                        f"mem={r['memory_s']*1e3:.1f}ms "
+                        f"coll={r['collective_s']*1e3:.1f}ms "
+                        f"dominant={r['dominant']} "
+                        f"hbm={res['memory'].get('peak_bytes_per_device_est',0)/2**30:.2f}GiB"
+                    )
+                mesh_tag = "2x16x16" if mp else "16x16"
+                print(f"[{dt_s:7.1f}s] {arch:24s} {shape_name:12s} "
+                      f"{mesh_tag:8s} {status}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

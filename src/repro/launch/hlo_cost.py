@@ -1,0 +1,343 @@
+"""While-trip-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+under-reports FLOPs/bytes/collectives for scan-over-layers models by the
+trip count (verified empirically: L=1 and L=4 starcoder2 report the same
+FLOPs). This module re-derives costs from the *optimized* HLO text,
+multiplying loop bodies by their ``known_trip_count`` backend config:
+
+  * flops: dot_general = 2 * prod(output) * prod(contracting dims)
+    (from the operand symbol table); elementwise/reduce = prod(shape);
+    called computations (fusion/call/while/conditional) recurse.
+  * bytes: kernel-level HBM traffic model = sum of operand+output sizes
+    of top-level instructions (post-fusion, fusion internals excluded).
+  * collectives: per-device bytes with ring-algorithm conventions
+    (analysis.py), multiplied by enclosing loop trips.
+
+This is the FLOPs/bytes source for the §Roofline tables; XLA's own
+numbers are recorded alongside for reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DT_SIZE = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALL_RE = re.compile(r"(?:calls=|condition=|body=|to_apply=)%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count.*?"n":"(\d+)"')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?")
+
+_ELEMWISE = (
+    "add", "subtract", "multiply", "divide", "tanh", "exponential", "log",
+    "maximum", "minimum", "power", "rsqrt", "sqrt", "negate", "abs",
+    "compare", "select", "and", "or", "not", "xor", "convert", "floor",
+    "cosine", "sine", "logistic", "remainder", "sign", "clamp",
+    "expm1", "log1p", "atan2",
+)
+
+def _ZF():
+    return {"dot": 0.0, "elem": 0.0}
+
+
+_COLLECTIVE_FACTORS = {
+    "all-gather": lambda out, g: out * (g - 1) / max(g, 1),
+    "all-reduce": lambda out, g: 2 * out * (g - 1) / max(g, 1),
+    "reduce-scatter": lambda out, g: out * (g - 1),
+    "all-to-all": lambda out, g: out * (g - 1) / max(g, 1),
+    "collective-permute": lambda out, g: out,
+}
+
+
+def _shapes(text: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DT_SIZE:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _elems(text: str) -> int:
+    return sum(n for _, n in _shapes(text))
+
+
+def _bytes(text: str) -> int:
+    return sum(n * _DT_SIZE[dt] for dt, n in _shapes(text))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_text: str  # output shape portion
+    op: str
+    rhs: str  # full right-hand side
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    defs: dict  # name -> output shape text
+
+
+_OP_RE = re.compile(r"^(\([^)]*\)|[\w\[\],{}]+)\s+([\w\-]+)\(")
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{", stripped)
+        if header and not stripped.startswith("%s32"):
+            cur = Computation(header.group(1), [], {})
+            comps[cur.name] = cur
+            if stripped.startswith("ENTRY") or line.startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if line.startswith("ENTRY"):
+            m = re.match(r"^ENTRY\s+%([\w.\-]+)", line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                comps["__entry__"] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs = "<shape> <op>(...)" or "(<tuple shapes>) <op>(...)"
+        om = _OP_RE.match(rhs)
+        if om:
+            out_text, op = om.group(1), om.group(2)
+        else:
+            parts = rhs.split(" ", 1)
+            out_text, op = parts[0], (parts[1].split("(")[0] if len(parts) > 1 else "")
+        cur.defs[name] = out_text
+        cur.instrs.append(Instr(name, out_text, op, rhs, line))
+    return comps
+
+
+def _operands(rhs: str) -> list[str]:
+    m = re.search(r"\((.*)\)", rhs)
+    if not m:
+        return []
+    inner = m.group(1)
+    return re.findall(r"%([\w.\-]+)", inner.split("), ")[0])
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        return max(
+            1,
+            len([x for x in first.replace("{", "").split(",") if x.strip()]),
+        )
+    return 1
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_computations(hlo_text)
+        self._cache: dict[str, tuple] = {}
+
+    # ------------------------------------------------------------------
+
+    def total(self) -> dict:
+        entry = self.comps.get("__entry__")
+        if entry is None:  # pragma: no cover
+            raise ValueError("no ENTRY computation found")
+        flops, bytes_, coll = self._comp_cost(entry.name, top=True)
+        return {
+            "flops": flops["dot"],  # MFU convention: matmul/conv flops
+            "flops_elementwise": flops["elem"],
+            "bytes": bytes_,
+            "collective_bytes": coll["total"],
+            "collective_per_op": coll["per_op"],
+        }
+
+    # ------------------------------------------------------------------
+
+    def _comp_cost(self, name: str, top: bool = False):
+        if name in self._cache:
+            return self._cache[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return {"dot": 0.0, "elem": 0.0}, 0.0, {"total": 0.0, "per_op": {}}
+        flops = {"dot": 0.0, "elem": 0.0}
+        bytes_ = 0.0
+        coll = {"total": 0.0, "per_op": {k: 0.0 for k in _COLLECTIVE_FACTORS}}
+        for ins in comp.instrs:
+            f, b, c = self._instr_cost(ins, comp)
+            flops["dot"] += f["dot"]
+            flops["elem"] += f["elem"]
+            bytes_ += b
+            coll["total"] += c["total"]
+            for k, v in c["per_op"].items():
+                coll["per_op"][k] = coll["per_op"].get(k, 0.0) + v
+        self._cache[name] = (flops, bytes_, coll)
+        return self._cache[name]
+
+    def _instr_cost(self, ins: Instr, comp: Computation):
+        zero_coll = {"total": 0.0, "per_op": {}}
+        op = ins.op
+        out_elems = _elems(ins.out_text)
+        out_bytes = _bytes(ins.out_text)
+
+        if op == "while":
+            trip = 1
+            m = _TRIP_RE.search(ins.line)
+            if m:
+                trip = int(m.group(1))
+            calls = _CALL_RE.findall(ins.line)
+            f = {"dot": 0.0, "elem": 0.0}
+            b = 0.0
+            c = {"total": 0.0, "per_op": {}}
+            for cname in calls:
+                cf, cb, cc = self._comp_cost(cname)
+                f["dot"] += cf["dot"]
+                f["elem"] += cf["elem"]
+                b += cb
+                c["total"] += cc["total"]
+                for k, v in cc["per_op"].items():
+                    c["per_op"][k] = c["per_op"].get(k, 0.0) + v
+            return (
+                {"dot": f["dot"] * trip, "elem": f["elem"] * trip},
+                b * trip,
+                {
+                    "total": c["total"] * trip,
+                    "per_op": {k: v * trip for k, v in c["per_op"].items()},
+                },
+            )
+
+        if op in ("fusion", "call", "conditional", "custom-call", "map"):
+            calls = _CALL_RE.findall(ins.line)
+            f = {"dot": 0.0, "elem": 0.0}
+            c = {"total": 0.0, "per_op": {}}
+            for cname in calls:
+                cf, _, cc = self._comp_cost(cname)
+                f["dot"] += cf["dot"]
+                f["elem"] += cf["elem"]
+                c["total"] += cc["total"]
+                for k, v in cc["per_op"].items():
+                    c["per_op"][k] = c["per_op"].get(k, 0.0) + v
+            # kernel-level traffic: operands + outputs of the fusion
+            b = out_bytes + self._operand_bytes(ins, comp)
+            return f, b, c
+
+        for cop, fn in _COLLECTIVE_FACTORS.items():
+            if op == cop or op == cop + "-start":
+                g = _group_size(ins.line)
+                cb = fn(out_bytes, g)
+                return _ZF(), out_bytes + self._operand_bytes(ins, comp), {
+                    "total": cb, "per_op": {cop: cb},
+                }
+
+        if op == "dot":
+            k_elems = self._contracting_elems(ins, comp)
+            f = {"dot": 2.0 * out_elems * k_elems, "elem": 0.0}
+            b = out_bytes + self._operand_bytes(ins, comp)
+            return f, b, zero_coll
+
+        if op == "convolution":
+            # rough: 2 * out * (kernel spatial * in_features)
+            ops_ = _operands(ins.rhs)
+            kshape = comp.defs.get(ops_[1]) if len(ops_) > 1 else None
+            kelem = _elems(kshape) if kshape else 1
+            f = 2.0 * out_elems * max(1, kelem // max(out_elems, 1))
+            f = max(f, 2.0 * kelem)  # floor
+            return (
+                {"dot": f, "elem": 0.0},
+                out_bytes + self._operand_bytes(ins, comp),
+                zero_coll,
+            )
+
+        if op in ("reduce", "reduce-window"):
+            red_in = self._operand_bytes(ins, comp) // 4 or out_elems
+            return (
+                {"dot": 0.0, "elem": float(red_in)},
+                out_bytes + self._operand_bytes(ins, comp),
+                zero_coll,
+            )
+
+        if op in _ELEMWISE:
+            return {"dot": 0.0, "elem": float(out_elems)}, 0.0, zero_coll
+
+        if op in ("copy", "copy-start", "transpose", "reshape", "broadcast",
+                  "concatenate", "slice", "dynamic-slice",
+                  "dynamic-update-slice", "gather", "scatter", "pad",
+                  "iota", "sort", "bitcast", "reverse", "rng",
+                  "get-tuple-element", "tuple", "parameter", "constant",
+                  "compare", "convert", "after-all", "partition-id",
+                  "replica-id", "optimization-barrier", "domain",
+                  "send", "recv", "infeed", "outfeed"):
+            heavy = op in ("copy", "transpose", "concatenate", "gather",
+                           "scatter", "dynamic-update-slice", "sort", "pad",
+                           "reverse", "dynamic-slice")
+            b = out_bytes + (self._operand_bytes(ins, comp) if heavy else 0)
+            if op in ("get-tuple-element", "tuple", "parameter", "constant",
+                      "bitcast", "reshape", "after-all",
+                      "optimization-barrier", "domain"):
+                b = 0.0
+            return _ZF(), float(b), zero_coll
+
+        # default: count output traffic only
+        return _ZF(), float(out_bytes), zero_coll
+
+    # ------------------------------------------------------------------
+
+    def _operand_bytes(self, ins: Instr, comp: Computation) -> int:
+        total = 0
+        for name in _operands(ins.rhs):
+            shape = comp.defs.get(name)
+            if shape:
+                total += _bytes(shape)
+        return total
+
+    def _contracting_elems(self, ins: Instr, comp: Computation) -> int:
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+        ops_ = _operands(ins.rhs)
+        if not m or not ops_:
+            return 1
+        dims = [int(x) for x in m.group(1).split(",") if x != ""]
+        lhs_shape = comp.defs.get(ops_[0])
+        if not lhs_shape:
+            return 1
+        sm = _SHAPE_RE.search(lhs_shape)
+        if not sm:
+            return 1
+        sizes = [int(x) for x in sm.group(2).split(",") if x != ""]
+        k = 1
+        for d in dims:
+            if d < len(sizes):
+                k *= sizes[d]
+        return k
+
+
+def cost_from_compiled(compiled) -> dict:
+    return HloCost(compiled.as_text()).total()

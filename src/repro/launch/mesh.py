@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state. Single pod: (16, 16) = 256 chips as ("data", "model");
+multi-pod: (2, 16, 16) with a leading "pod" axis (data parallelism
+across pods; params replicated pod-wise, gradients reduced over
+("pod", "data"))."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh for multi-device CPU tests (subprocess-launched with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,58 @@
+"""Step-function builders: train_step / prefill_step / serve_step.
+
+These are the exact functions the dry-run lowers and the drivers run.
+Activation sharding constraints (Megatron-style sequence parallelism at
+layer boundaries) are applied here so the model code stays
+mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    dt: L.Dtypes = L.FP32):
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return T.loss_fn(p, batch, cfg, dt)
+
+        l, grads = jax.value_and_grad(loss)(params)
+        params2, opt2, metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics["loss"] = l
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, dt: L.Dtypes = L.FP32,
+                      max_seq: Optional[int] = None):
+    def prefill_step(params, batch):
+        return T.prefill(
+            params, batch["tokens"], cfg, dt,
+            frontend=batch.get("frontend"), max_seq=max_seq,
+        )
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, dt: L.Dtypes = L.FP32):
+    def serve_step(params, tokens, cache, lengths, enc_out=None):
+        logits, new_cache = T.decode_step(
+            params, tokens, cache, lengths, cfg, dt, enc_out=enc_out
+        )
+        return logits, new_cache, lengths + 1
+
+    return serve_step

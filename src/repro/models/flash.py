@@ -1,0 +1,224 @@
+"""Blocked (flash-style) attention in pure JAX with a custom VJP.
+
+Forward: static double loop (scan over q blocks, bounded fori over kv
+blocks with causal block-skip) and online softmax — memory per step is
+O(q_block * kv_block), never the (S, S) score matrix.
+
+Backward: custom VJP with block recomputation (the real FlashAttention
+recipe): residuals are only (q, k, v, out, row-logsumexp) = O(S·d); the
+probability tiles are recomputed blockwise while accumulating dq/dk/dv.
+Without this, differentiating the scan saves every (q,k) tile —
+~400 GiB/device at 4k context (measured; see EXPERIMENTS.md §Perf).
+
+Because AD never enters the loops, the causal block-skip (dynamic fori
+bound) is usable in training too — the compiled FLOPs include only the
+lower-triangle blocks.
+
+The Pallas kernel in kernels/attention is the TPU twin of this loop
+structure; tests validate both against attention_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# Causal block handling: "full" computes every (q, kv) block pair with
+# masking (≈2x causal FLOPs, but statically counted in the HLO);
+# "skip" bounds the kv loop at each q block's diagonal (dynamic trip —
+# saves the compute but XLA can't report its FLOPs). EXPERIMENTS.md §Perf
+# iterates this into the lower-triangle enumeration ("triangle"), which
+# is both minimal and statically counted.
+CAUSAL_BLOCKS = "full"  # full | skip
+
+
+def _n_eff(causal, qi, qb, kb, nk):
+    if not causal or CAUSAL_BLOCKS == "full":
+        return nk
+    return jnp.minimum(nk, ((qi + 1) * qb + kb - 1) // kb)
+
+
+def _blockify(q, k, v, q_block, kv_block):
+    b, s, h, d = q.shape
+    s_kv, hk = k.shape[1], k.shape[2]
+    qb = min(q_block, s)
+    kb = min(kv_block, s_kv)
+    assert s % qb == 0 and s_kv % kb == 0, (s, qb, s_kv, kb)
+    return qb, kb, s // qb, s_kv // kb
+
+
+def _mask(q_pos, k_pos, causal, window):
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]
+    w = jnp.asarray(window, jnp.int32)
+    return mask & ((w == 0) | (k_pos[None, :] > q_pos[:, None] - w))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _flash(causal: bool, q_block: int, kv_block: int, q, k, v, window):
+    out, _ = _flash_fwd_impl(causal, q_block, kv_block, q, k, v, window)
+    return out
+
+
+def _flash_fwd_impl(causal, q_block, kv_block, q, k, v, window):
+    b, s, h, d = q.shape
+    s_kv, hk = k.shape[1], k.shape[2]
+    dv = v.shape[3]  # value head dim may differ from qk head dim (MLA)
+    rep = h // hk
+    scale = d ** -0.5
+    qb, kb, nq, nk = _blockify(q, k, v, q_block, kv_block)
+
+    qr = q.reshape(b, nq, qb, hk, rep, d).astype(jnp.float32) * scale
+    kr = k.reshape(b, nk, kb, hk, d).astype(jnp.float32)
+    vr = v.reshape(b, nk, kb, hk, dv).astype(jnp.float32)
+
+    def q_step(_, qi):
+        qblk = qr[:, qi]
+        q_pos = qi * qb + jnp.arange(qb)
+
+        def kv_step(ki, carry):
+            acc, m, l = carry
+            kblk, vblk = kr[:, ki], vr[:, ki]
+            sc = jnp.einsum("bqhrd,bkhd->bhrqk", qblk, kblk)
+            k_pos = ki * kb + jnp.arange(kb)
+            msk = _mask(q_pos, k_pos, causal, window)
+            sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhrqk,bkhd->bhrqd", p, vblk
+            )
+            return acc_new, m_new, l_new
+
+        acc0 = jnp.zeros((b, hk, rep, qb, dv), jnp.float32)
+        m0 = jnp.full((b, hk, rep, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, rep, qb), jnp.float32)
+        acc, m, l = jax.lax.fori_loop(
+            0, _n_eff(causal, qi, qb, kb, nk), kv_step, (acc0, m0, l0)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (b, hk, rep, qb)
+        return None, (jnp.moveaxis(out, 3, 1).reshape(b, qb, h, dv), lse)
+
+    _, (blocks, lses) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = jnp.moveaxis(blocks, 0, 1).reshape(b, s, h, dv).astype(q.dtype)
+    # lses: (nq, b, hk, rep, qb) -> (b, hk, rep, s)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, hk, rep, s)
+    return out, lse
+
+
+def _flash_fwd(causal, q_block, kv_block, q, k, v, window):
+    out, lse = _flash_fwd_impl(causal, q_block, kv_block, q, k, v, window)
+    return out, (q, k, v, window, out, lse)
+
+
+def _flash_bwd(causal, q_block, kv_block, res, g):
+    q, k, v, window, out, lse = res
+    b, s, h, d = q.shape
+    s_kv, hk = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    rep = h // hk
+    scale = d ** -0.5
+    qb, kb, nq, nk = _blockify(q, k, v, q_block, kv_block)
+
+    qr = q.reshape(b, nq, qb, hk, rep, d).astype(jnp.float32) * scale
+    kr = k.reshape(b, nk, kb, hk, d).astype(jnp.float32)
+    vr = v.reshape(b, nk, kb, hk, dv).astype(jnp.float32)
+    do = g.reshape(b, nq, qb, hk, rep, dv).astype(jnp.float32)
+    o = out.reshape(b, nq, qb, hk, rep, dv).astype(jnp.float32)
+    lse_r = lse.reshape(b, hk, rep, nq, qb)
+
+    def q_step(carry, qi):
+        dk, dvc = carry  # (b, nk, kb, hk, ·) f32 accumulators
+        qblk = qr[:, qi]  # (b, qb, hk, rep, d)
+        doblk = do[:, qi]
+        oblk = o[:, qi]
+        lblk = lse_r[:, :, :, qi]  # (b, hk, rep, qb)
+        # D_i = rowsum(dO * O)
+        dmat = jnp.einsum("bqhrd,bqhrd->bhrq", doblk, oblk)
+        q_pos = qi * qb + jnp.arange(qb)
+
+        def kv_step(ki, inner):
+            dq_blk, dk, dvacc = inner
+            kblk, vblk = kr[:, ki], vr[:, ki]
+            sc = jnp.einsum("bqhrd,bkhd->bhrqk", qblk, kblk)
+            k_pos = ki * kb + jnp.arange(kb)
+            msk = _mask(q_pos, k_pos, causal, window)
+            sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+            p = jnp.exp(sc - lblk[..., None])  # (b,hk,rep,qb,kb)
+            dv_c = jnp.einsum("bhrqk,bqhrd->bkhd", p, doblk)
+            dp = jnp.einsum("bqhrd,bkhd->bhrqk", doblk, vblk)
+            ds = p * (dp - dmat[..., None])
+            dq_blk = dq_blk + jnp.einsum("bhrqk,bkhd->bqhrd", ds, kblk)
+            dk_c = jnp.einsum("bhrqk,bqhrd->bkhd", ds, qblk)
+            dk = jax.lax.dynamic_update_slice(
+                dk,
+                jax.lax.dynamic_slice(
+                    dk, (0, ki, 0, 0, 0), (b, 1, kb, hk, d)
+                ) + dk_c[:, None],
+                (0, ki, 0, 0, 0),
+            )
+            dvacc = jax.lax.dynamic_update_slice(
+                dvacc,
+                jax.lax.dynamic_slice(
+                    dvacc, (0, ki, 0, 0, 0), (b, 1, kb, hk, dv)
+                ) + dv_c[:, None],
+                (0, ki, 0, 0, 0),
+            )
+            return dq_blk, dk, dvacc
+
+        dq0 = jnp.zeros((b, qb, hk, rep, d), jnp.float32)
+        dq_blk, dk, dvc = jax.lax.fori_loop(
+            0, _n_eff(causal, qi, qb, kb, nk), kv_step, (dq0, dk, dvc)
+        )
+        return (dk, dvc), dq_blk * scale
+
+    dk0 = jnp.zeros((b, nk, kb, hk, d), jnp.float32)
+    dv0 = jnp.zeros((b, nk, kb, hk, dv), jnp.float32)
+    (dk, dvc), dq_blocks = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(b, s, h, d).astype(q.dtype)
+    dk_out = dk.reshape(b, s_kv, hk, d).astype(k.dtype)
+    dv_out = dvc.reshape(b, s_kv, hk, dv).astype(v.dtype)
+    return dq, dk_out, dv_out, None  # no cotangent for window
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_mha(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S_kv, Hk, D)
+    v: jax.Array,  # (B, S_kv, Hk, D)
+    *,
+    causal: bool = True,
+    window=0,  # static int or traced scalar; 0 = full attention
+    q_block: int = 512,
+    kv_block: int = 512,
+    skip_masked_blocks: bool = True,  # kept for API compat; always safe now
+) -> jax.Array:
+    del skip_masked_blocks  # the custom VJP makes the skip AD-safe
+    qb = min(q_block, q.shape[1])
+    kb = min(kv_block, k.shape[1])
+    return _flash(bool(causal), qb, kb, q, k, v, jnp.asarray(window, jnp.int32))
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """Direct O(S^2)-memory oracle for flash_mha."""
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    rep = h // hk
+    qr = q.reshape(b, s, hk, rep, d).astype(jnp.float32) * (d ** -0.5)
+    sc = jnp.einsum("bqhrd,bkhd->bhrqk", qr, k.astype(jnp.float32))
+    q_pos, k_pos = jnp.arange(s), jnp.arange(k.shape[1])
+    msk = _mask(q_pos, k_pos, causal, window)
+    sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhrqk,bkhd->bhrqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,429 @@
+"""Dense layer library: norms, RoPE, GQA/MLA attention, MLPs, MoE.
+
+Pure-functional JAX: every layer is (init(key, cfg) -> params dict,
+apply(params, x, ...) -> y). Parameters are plain pytrees so the
+distributed layer can attach PartitionSpecs by path (distributed/
+partition.py) and the checkpoint layer can serialize by name.
+
+Attention supports three execution modes used by the launchers:
+  * train/prefill: full-sequence causal (optionally sliding-window),
+  * decode: one token against a KV cache (the monotonic append/attend
+    RAW pair of DESIGN.md §3.2),
+  * cross: encoder-decoder (whisper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Dtypes:
+    param: jnp.dtype = jnp.bfloat16
+    compute: jnp.dtype = jnp.bfloat16
+    accum: jnp.dtype = jnp.float32
+
+
+FP32 = Dtypes(jnp.float32, jnp.float32, jnp.float32)
+BF16 = Dtypes()
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def rope(x, positions, theta, dims: Optional[int] = None):
+    """Rotary embedding over the last ``dims`` features (default all)."""
+    d = dims or x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:d]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if d < x.shape[-1]:
+        rotated = jnp.concatenate([rotated, x[..., d:]], axis=-1)
+    return rotated.astype(x.dtype)
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ArchConfig, dt: Dtypes):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nk = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": _init(ks[0], (d, nh * hd), s, dt.param),
+        "wk": _init(ks[1], (d, nk * hd), s, dt.param),
+        "wv": _init(ks[2], (d, nk * hd), s, dt.param),
+        "wo": _init(ks[3], (nh * hd, d), (nh * hd) ** -0.5, dt.param),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt.param)
+        p["k_norm"] = jnp.zeros((hd,), dt.param)
+    return p
+
+
+def _sdpa(q, k, v, mask):
+    """(B, S, H, D) attention with f32 softmax accumulation."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def gqa_apply(
+    p,
+    x,
+    cfg: ArchConfig,
+    *,
+    positions,
+    causal: bool = True,
+    window: int = 0,
+    kv_cache=None,  # (k, v) of shape (B, S_max, nk, hd); decode mode
+    cache_len=None,  # (B,) committed KV frontier (decode)
+    kv_source=None,  # cross attention: encoder output (B, S_enc, d)
+    use_rope: bool = True,
+    eps: float = 1e-6,
+):
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    nh, nk = cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, nh, hd)
+    src = kv_source if kv_source is not None else x
+    k = (src @ p["wk"].astype(x.dtype)).reshape(b, src.shape[1], nk, hd)
+    v = (src @ p["wv"].astype(x.dtype)).reshape(b, src.shape[1], nk, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    if use_rope and kv_source is None:
+        q = rope(q, positions[:, :, None], cfg.rope_theta)
+        kpos = positions if kv_cache is None else positions
+        k = rope(k, kpos[:, :, None], cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        idx = cache_len  # (B,) write position of the new token
+        ck = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
+            c, kk, (i, 0, 0)))(ck, k, idx)
+        cv = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
+            c, vv, (i, 0, 0)))(cv, v, idx)
+        k, v = ck, cv
+        new_cache = (ck, cv)
+
+    # expand kv heads to query heads
+    if nk != nh:
+        rep = nh // nk
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    s_kv = k.shape[1]
+    q_pos = positions  # (B, S)
+    if kv_cache is not None:
+        k_pos = jnp.arange(s_kv)[None, :]
+        valid = k_pos <= q_pos[:, :1]  # monotonic frontier (append<=attend)
+        mask = valid[:, None, :, :] if False else valid[:, None, None, :]
+        mask = jnp.broadcast_to(mask, (b, 1, s, s_kv))
+        if window:
+            mask = mask & (k_pos[:, None, None, :] > q_pos[:, None, :, None] - window)
+    elif kv_source is not None:
+        mask = jnp.ones((b, 1, s, s_kv), bool)
+    else:
+        k_pos = positions
+        mask = q_pos[:, None, :, None] >= k_pos[:, None, None, :]
+        if window:
+            mask = mask & (k_pos[:, None, None, :] > q_pos[:, None, :, None] - window)
+        if not causal:
+            mask = jnp.ones((b, 1, s, s_kv), bool)
+    out = _sdpa(q, k, v, mask)
+    y = out.reshape(b, s, nh * hd) @ p["wo"].astype(x.dtype)
+    return (y, new_cache) if kv_cache is not None else y
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (minicpm3 / deepseek-style)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ArchConfig, dt: Dtypes):
+    d = cfg.d_model
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wq_a": _init(ks[0], (d, r_q), s, dt.param),
+        "wq_b": _init(ks[1], (r_q, nh * (dn + dr)), r_q ** -0.5, dt.param),
+        "wkv_a": _init(ks[2], (d, r_kv + dr), s, dt.param),
+        "wkv_b": _init(ks[3], (r_kv, nh * (dn + dv)), r_kv ** -0.5, dt.param),
+        "wo": _init(ks[4], (nh * dv, d), (nh * dv) ** -0.5, dt.param),
+        "q_a_norm": jnp.zeros((r_q,), dt.param),
+        "kv_a_norm": jnp.zeros((r_kv,), dt.param),
+    }
+
+
+def mla_apply(
+    p,
+    x,
+    cfg: ArchConfig,
+    *,
+    positions,
+    kv_cache=None,  # (latent (B,S_max,r_kv), k_rope (B,S_max,dr))
+    cache_len=None,
+    eps: float = 1e-6,
+):
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+
+    q_lat = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_a_norm"], eps)
+    q = (q_lat @ p["wq_b"].astype(x.dtype)).reshape(b, s, nh, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions[:, :, None], cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"].astype(x.dtype)
+    latent = rms_norm(kv_a[..., :r_kv], p["kv_a_norm"], eps)
+    k_rope = rope(
+        kv_a[..., r_kv:][:, :, None, :], positions[:, :, None], cfg.rope_theta
+    )[:, :, 0, :]
+
+    new_cache = None
+    if kv_cache is not None:
+        c_lat, c_kr = kv_cache
+        c_lat = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0)))(c_lat, latent, cache_len)
+        c_kr = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0)))(c_kr, k_rope, cache_len)
+        latent, k_rope = c_lat, c_kr
+        new_cache = (c_lat, c_kr)
+
+    s_kv = latent.shape[1]
+    wkv_b = p["wkv_b"].astype(x.dtype).reshape(r_kv, nh, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]  # (r, nh, dn), (r, nh, dv)
+
+    if kv_cache is None:
+        # train/prefill: expand per-head K/V from the latent and run
+        # blocked flash attention (never materializes (S, S) scores)
+        from repro.models import shardctx
+        from repro.models.flash import flash_mha
+
+        k_nope = jnp.einsum("bkr,rhd->bkhd", latent, w_uk)
+        v_full = jnp.einsum("bkr,rhd->bkhd", latent, w_uv)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s_kv, nh, dr))],
+            axis=-1,
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        spec = shardctx.attn_spec(nh, b)
+        if spec is not None:
+            q_full = shardctx.constrain(q_full, *spec)
+            k_full = shardctx.constrain(k_full, *spec)
+            v_full = shardctx.constrain(v_full, *spec)
+        out = flash_mha(q_full, k_full, v_full, causal=True)
+        if spec is not None:
+            out = shardctx.constrain(out, *spec)
+        return out.reshape(b, s, nh * dv) @ p["wo"].astype(x.dtype)
+
+    # decode: absorbed attention in latent space (the MLA memory win —
+    # the cache holds (latent, k_rope) only)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)  # (b, s, nh, r)
+    scores = jnp.einsum(
+        "bshr,bkr->bhsk", q_abs, latent, preferred_element_type=jnp.float32
+    )
+    scores = scores + jnp.einsum(
+        "bshd,bkd->bhsk", q_rope, k_rope, preferred_element_type=jnp.float32
+    )
+    scores = scores * ((dn + dr) ** -0.5)
+
+    q_pos = positions
+    k_pos = jnp.arange(s_kv)[None, :]
+    mask = (k_pos <= q_pos[:, :1])[:, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+
+    ctx_lat = jnp.einsum("bhsk,bkr->bshr", w, latent)  # (b, s, nh, r)
+    out = jnp.einsum("bshr,rhd->bshd", ctx_lat, w_uv)  # absorbed W_uv
+    y = out.reshape(b, s, nh * dv) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs and MoE
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ArchConfig, dt: Dtypes, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": _init(ks[0], (d, ff), d ** -0.5, dt.param),
+        "w_out": _init(ks[1], (ff, d), ff ** -0.5, dt.param),
+    }
+    if cfg.gated:
+        p["w_gate"] = _init(ks[2], (d, ff), d ** -0.5, dt.param)
+    return p
+
+
+def _act(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp_apply(p, x, cfg: ArchConfig):
+    h = x @ p["w_in"].astype(x.dtype)
+    if cfg.gated:
+        h = _act(cfg.act)(x @ p["w_gate"].astype(x.dtype)) * h
+    else:
+        h = _act(cfg.act)(h)
+    return h @ p["w_out"].astype(x.dtype)
+
+
+def moe_init(key, cfg: ArchConfig, dt: Dtypes):
+    d, ff, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, e), d ** -0.5, jnp.float32),
+        "w_in": _init(ks[1], (e, d, ff), d ** -0.5, dt.param),
+        "w_out": _init(ks[2], (e, ff, d), ff ** -0.5, dt.param),
+    }
+    if cfg.gated:
+        p["w_gate"] = _init(ks[3], (e, d, ff), d ** -0.5, dt.param)
+    if cfg.n_shared_experts:
+        shared_ff = ff * cfg.n_shared_experts
+        p["shared"] = mlp_init(ks[4], cfg, dt, d_ff=shared_ff)
+    return p
+
+
+def moe_apply(
+    p,
+    x,
+    cfg: ArchConfig,
+    *,
+    use_kernel: bool = False,
+    capacity_factor: float = 1.25,
+):
+    """MoE FFN via *monotonic dispatch* (DESIGN.md §3.1).
+
+    Default path: capacity-based gather/scatter. Tokens are placed into
+    per-expert buffers at positions given by a cumulative count over the
+    assignment stream — the vectorized frontier merge of the paper (the
+    expert buffer is the DU "pending buffer", the capacity its depth).
+    FLOPs stay proportional to *active* params (top_k of n_experts); the
+    dispatch itself is pure data movement, so the compiled HLO FLOPs in
+    the roofline reflect useful compute. Tokens above capacity drop
+    (capacity_factor 1.25); the Pallas path (kernels/moe_group_mm) is
+    the fully dropless variant used on real token streams.
+    """
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    t = flat.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (flat @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels.moe_group_mm.ops import moe_ffn
+
+        out = moe_ffn(
+            flat, logits, p["w_in"], p.get("w_gate"), p["w_out"],
+            top_k=cfg.top_k,
+        )
+    else:
+        from repro.models import shardctx
+
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+        # Hierarchical dispatch (§Perf iteration: moonshot/phi3.5 train):
+        # tokens are grouped by their data shard and dispatched into
+        # per-group capacity buffers, so the scatter/gather stays
+        # shard-local. A single global buffer gets replicated by the SPMD
+        # partitioner (measured: 161 GiB temp on moonshot train_4k,
+        # flat in layer count — one giant allocation).
+        g_count = max(shardctx.axis_size(shardctx.dp_axes()), 1)
+        if t % g_count != 0:
+            g_count = 1
+        tg = t // g_count  # tokens per group
+        cap = max(1, int(capacity_factor * tg * k / e))
+
+        flat_e = top_e.reshape(g_count, tg * k)  # per-group streams
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (G, Tg*k, E)
+        # position inside the expert buffer: the monotonic frontier count
+        # per group (cumsum == searchsorted post-sort)
+        pos = jnp.sum((jnp.cumsum(onehot, axis=1) - 1) * onehot, axis=-1)
+        keep = pos < cap
+        slot = jnp.where(keep, flat_e * cap + pos, e * cap)  # overflow row
+
+        tok = jnp.arange(tg * k) // k  # token-in-group per assignment
+        xg = flat.reshape(g_count, tg, d)
+
+        # per-group scatter/gather via vmap: the group axis is a clean
+        # batch dim the SPMD partitioner can shard (2D fancy indexing
+        # defeated it — measured 48 GiB x4 replicated (T*k, d) buffers)
+        def dispatch_g(xg_g, slot_g):
+            return jnp.zeros((e * cap + 1, d), flat.dtype).at[slot_g].set(
+                xg_g[tok]
+            )
+
+        buf = jax.vmap(dispatch_g)(xg, slot)
+        xe = buf[:, : e * cap].reshape(g_count, e, cap, d)
+        xe = shardctx.constrain(xe, shardctx.dp_axes(), None, None, None)
+        # NOTE: additionally pinning the expert dim to the model axis was
+        # REFUTED (phi3.5: 80 -> 220s collective) — XLA materializes the
+        # forced token->expert resharding through a replicated
+        # intermediate. Group-local placement only.
+
+        h = jnp.einsum("gecd,edf->gecf", xe, p["w_in"].astype(flat.dtype))
+        if cfg.gated:
+            gt = jnp.einsum(
+                "gecd,edf->gecf", xe, p["w_gate"].astype(flat.dtype)
+            )
+            h = _act(cfg.act)(gt) * h
+        else:
+            h = _act(cfg.act)(h)
+        ye = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(flat.dtype))
+        ye = shardctx.constrain(ye, shardctx.dp_axes(), None, None, None)
+
+        gates = (
+            top_p.reshape(g_count, tg * k) * keep
+        ).astype(flat.dtype)
+
+        def combine_g(ye_g, slot_g, gates_g):
+            ya = ye_g.reshape(e * cap, d)[jnp.minimum(slot_g, e * cap - 1)]
+            return jnp.zeros((tg, d), flat.dtype).at[tok].add(
+                ya * gates_g[:, None]
+            )
+
+        out = jax.vmap(combine_g)(ye, slot, gates).reshape(t, d)
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(p["shared"], flat, cfg)
+    return out.reshape(b, s, d)

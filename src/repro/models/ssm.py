@@ -1,0 +1,306 @@
+"""Mamba-1 and Mamba-2 blocks with chunked selective scan.
+
+The chunked scan is the SSM instance of the paper's pattern
+(DESIGN.md §3.3): chunk-final states are *stored* by chunk c and
+*loaded* by chunk c+1 — a RAW chain over a trivially monotonic chunk
+index, executed as an outer ``lax.scan`` (sequential frontier) with a
+fully parallel intra-chunk computation.
+
+Memory discipline (§Perf iteration zamba2/falcon-mamba): all
+(chunk, d_inner, d_state)-sized tensors are materialized *inside* the
+chunk scan body — never for the full sequence. Mamba-2 uses the SSD
+quadratic-in-chunk form (per-head (C, C) decay matrices) so the
+(hd, d_state) outer product only appears in the O(1)-per-chunk state
+update, not per position.
+
+Decode is the O(1) recurrent step on the carried (conv window, h state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Dtypes, _init, rms_norm
+
+MAMBA2_HEAD = 64
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg: ArchConfig, dt: Dtypes):
+    d = cfg.d_model
+    di = cfg.expand * d
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_in": _init(ks[0], (d, 2 * di), d ** -0.5, dt.param),  # x and z
+        "conv_w": _init(ks[1], (cfg.d_conv, di), 0.5, dt.param),
+        "conv_b": jnp.zeros((di,), dt.param),
+        "w_out": _init(ks[2], (di, d), di ** -0.5, dt.param),
+    }
+    if cfg.ssm == "mamba1":
+        p.update({
+            # S4D-real init: A negative diagonals
+            "a_log": jnp.log(
+                jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+            ).astype(jnp.float32),
+            "w_bc": _init(ks[3], (di, 2 * n), di ** -0.5, dt.param),
+            "w_dt": _init(ks[4], (di, 1), di ** -0.5, dt.param),
+            "dt_bias": jnp.zeros((di,), jnp.float32),
+            "d_skip": jnp.ones((di,), jnp.float32),
+        })
+    else:  # mamba2 (SSD): scalar decay per head
+        nh = di // MAMBA2_HEAD
+        p.update({
+            "a_log": jnp.zeros((nh,), jnp.float32),
+            "w_bc": _init(ks[3], (d, 2 * n), d ** -0.5, dt.param),
+            "w_dt": _init(ks[4], (d, nh), d ** -0.5, dt.param),
+            "dt_bias": jnp.zeros((nh,), jnp.float32),
+            "d_skip": jnp.ones((nh,), jnp.float32),
+            "norm_scale": jnp.zeros((di,), dt.param),
+        })
+    return p
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, S, di); w: (K, di). state: (B, K-1, di) carried for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k)
+    )
+    new_state = xp[:, -(k - 1):, :]
+    return out + b.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# mamba1: chunked scan with chunk-internal (C, di, n) working set
+# ---------------------------------------------------------------------------
+
+
+def _mamba1_chunked(p, xi, cfg: ArchConfig, h0, chunk: int):
+    """xi: (B, S, di) post-conv/silu. Returns (y (B,S,di) f32, h_final).
+
+    Structure: outer scan over chunks (the §3.3 RAW frontier chain) with
+    a remat'd inner position scan — the exact shape of a fused TPU mamba
+    kernel (sequential in time, vectorized over (di, n)); working set is
+    one (B, C, di) projection block plus a (B, di, n) state, and the
+    backward pass recomputes inside each chunk instead of saving
+    (B, S, di, n) residuals. Numerically exact (no cum-product
+    divisions), NaN-free by construction.
+    """
+    b, s, di = xi.shape
+    n = cfg.ssm_state
+    c = min(chunk, s)
+    nc = s // c
+    xi_c = jnp.moveaxis(xi.reshape(b, nc, c, di), 1, 0)  # (nc, B, C, di)
+    a_neg = -jnp.exp(p["a_log"])  # (di, n)
+
+    def chunk_step(h, xi_i):
+        bc = xi_i @ p["w_bc"].astype(xi_i.dtype)
+        bmat = bc[..., :n].astype(jnp.float32)  # (B, C, n)
+        cmat = bc[..., n:].astype(jnp.float32)
+        dt_ = jax.nn.softplus(
+            (xi_i @ p["w_dt"].astype(xi_i.dtype)).astype(jnp.float32)
+            + p["dt_bias"][None, None, :]
+        )  # (B, C, di)
+        xf = xi_i.astype(jnp.float32)
+
+        def pos_step(hc, t):
+            a_t = jnp.exp(a_neg[None] * dt_[:, t, :, None])  # (B, di, n)
+            bx_t = (
+                dt_[:, t, :, None] * bmat[:, t, None, :]
+            ) * xf[:, t, :, None]
+            h_new = a_t * hc + bx_t
+            y_t = jnp.einsum("bdn,bn->bd", h_new, cmat[:, t])
+            return h_new, y_t
+
+        h_fin, y_i = jax.lax.scan(pos_step, h, jnp.arange(c))
+        return h_fin, jnp.moveaxis(y_i, 0, 1)  # (B, C, di)
+
+    chunk_step = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    h_final, y_chunks = jax.lax.scan(chunk_step, h0, xi_c)
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(b, s, di)
+    return y, h_final
+
+
+def _mamba1_step(p, xi_t, h):
+    """One recurrent step: xi_t (B, di), h (B, di, n)."""
+    n = h.shape[-1]
+    bc = xi_t @ p["w_bc"].astype(xi_t.dtype)
+    bmat, cmat = bc[..., :n].astype(jnp.float32), bc[..., n:].astype(jnp.float32)
+    dt_ = jax.nn.softplus(
+        (xi_t @ p["w_dt"].astype(xi_t.dtype)).astype(jnp.float32)
+        + p["dt_bias"][None, :]
+    )  # (B, di)
+    a = jnp.exp(-jnp.exp(p["a_log"])[None] * dt_[..., None])  # (B, di, n)
+    bx = (dt_[..., None] * bmat[:, None, :]) * xi_t.astype(jnp.float32)[..., None]
+    h_new = a * h + bx
+    y = jnp.einsum("bdn,bn->bd", h_new, cmat)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# mamba2 (SSD): quadratic-in-chunk with per-head (C, C) decay matrices
+# ---------------------------------------------------------------------------
+
+
+def _mamba2_chunked(p, x_resid, xi, cfg: ArchConfig, h0, chunk: int):
+    """x_resid: (B, S, d) block input (B/C/dt projections read it);
+    xi: (B, S, di) post-conv/silu. Returns (y (B,S,di) f32, h_final)."""
+    b, s, di = xi.shape
+    n = cfg.ssm_state
+    nh = di // MAMBA2_HEAD
+    hd = MAMBA2_HEAD
+    c = min(chunk, s)
+    nc = s // c
+
+    xh_c = jnp.moveaxis(xi.reshape(b, nc, c, nh, hd), 1, 0)
+    xr_c = jnp.moveaxis(x_resid.reshape(b, nc, c, x_resid.shape[-1]), 1, 0)
+    a_neg = -jnp.exp(p["a_log"])  # (nh,)
+
+    def step(h, inputs):
+        xr_i, xh_i = inputs  # (B, C, d), (B, C, nh, hd)
+        bc = xr_i @ p["w_bc"].astype(xr_i.dtype)
+        bmat = bc[..., :n].astype(jnp.float32)  # (B, C, n)
+        cmat = bc[..., n:].astype(jnp.float32)
+        dt_ = jax.nn.softplus(
+            (xr_i @ p["w_dt"].astype(xr_i.dtype)).astype(jnp.float32)
+            + p["dt_bias"][None, None, :]
+        )  # (B, C, nh)
+        loga = a_neg[None, None] * dt_  # (B, C, nh) <= 0
+        logcum = jnp.cumsum(loga, axis=1)  # (B, C, nh)
+        xf = xh_i.astype(jnp.float32)
+
+        # intra-chunk: Y[t] = sum_{j<=t} exp(lc_t - lc_j) (C_t.B_j) dt_j x_j
+        ldiff = jnp.maximum(
+            logcum[:, :, None, :] - logcum[:, None, :, :], -30.0
+        )  # (B, C, C, nh): t rows, j cols
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(tri[None, :, :, None], jnp.exp(ldiff), 0.0)
+        scores = jnp.einsum("btn,bjn->btj", cmat, bmat)  # (B, C, C)
+        wmat = w * scores[..., None] * dt_[:, None, :, :]  # (B,C,C,nh)
+        y_intra = jnp.einsum("btjh,bjhp->bthp", wmat, xf)
+
+        # inter-chunk: carry-in state contribution
+        decay_t = jnp.exp(jnp.maximum(logcum, -30.0))  # (B, C, nh)
+        y_inter = jnp.einsum(
+            "btn,bhpn,bth->bthp", cmat, h, decay_t
+        )
+
+        # state update: h' = decay_C * h + sum_j exp(lc_C - lc_j) dt_j x_j B_j
+        decay_last = jnp.exp(
+            jnp.maximum(logcum[:, -1:, :] - logcum, -30.0)
+        ) * dt_  # (B, C, nh) weights
+        h_new = (
+            jnp.exp(jnp.maximum(logcum[:, -1], -30.0))[:, :, None, None] * h
+            + jnp.einsum("bjh,bjhp,bjn->bhpn", decay_last, xf, bmat)
+        )
+        y = (y_intra + y_inter).reshape(b, c, di)
+        return h_new, y
+
+    step = jax.checkpoint(
+        step, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    h_final, y_chunks = jax.lax.scan(step, h0, (xr_c, xh_c))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(b, s, di)
+    return y, h_final
+
+
+def _mamba2_step(p, xr_t, xh_t, h, n):
+    """xr_t: (B, d); xh_t: (B, nh, hd); h: (B, nh, hd, n)."""
+    bc = xr_t @ p["w_bc"].astype(xr_t.dtype)
+    bmat, cmat = bc[..., :n].astype(jnp.float32), bc[..., n:].astype(jnp.float32)
+    dt_ = jax.nn.softplus(
+        (xr_t @ p["w_dt"].astype(xr_t.dtype)).astype(jnp.float32)
+        + p["dt_bias"][None, :]
+    )  # (B, nh)
+    a = jnp.exp(-jnp.exp(p["a_log"])[None] * dt_)  # (B, nh)
+    bx = jnp.einsum(
+        "bh,bhp,bn->bhpn", dt_, xh_t.astype(jnp.float32), bmat
+    )
+    h_new = a[..., None, None] * h + bx
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cmat)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# public block API
+# ---------------------------------------------------------------------------
+
+
+def mamba_apply(p, x, cfg: ArchConfig, *, state=None):
+    """x: (B, S, d). state: None for training, else dict with
+    ``conv`` (B, K-1, di) and ``h``. Returns (y, new_state)."""
+    b, s, d = x.shape
+    di = cfg.expand * d
+    n = cfg.ssm_state
+
+    xz = x @ p["w_in"].astype(x.dtype)
+    xi, z = xz[..., :di], xz[..., di:]
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    if cfg.ssm == "mamba1":
+        h0 = (
+            jnp.zeros((b, di, n), jnp.float32) if state is None else state["h"]
+        )
+        if s == 1:
+            y, new_h = _mamba1_step(p, xi[:, 0], h0)
+            y = y[:, None, :]
+        else:
+            y, new_h = _mamba1_chunked(p, xi, cfg, h0, cfg.ssm_chunk)
+        y = y + xi.astype(jnp.float32) * p["d_skip"][None, None, :]
+    else:
+        nh = di // MAMBA2_HEAD
+        h0 = (
+            jnp.zeros((b, nh, MAMBA2_HEAD, n), jnp.float32)
+            if state is None
+            else state["h"]
+        )
+        if s == 1:
+            y, new_h = _mamba2_step(
+                p, x[:, 0], xi[:, 0].reshape(b, nh, MAMBA2_HEAD), h0, n
+            )
+            y = y.reshape(b, 1, di)
+        else:
+            y, new_h = _mamba2_chunked(p, x, xi, cfg, h0, cfg.ssm_chunk)
+        y = y + jnp.repeat(
+            p["d_skip"][None, None, :], MAMBA2_HEAD, axis=-1
+        ) * xi.astype(jnp.float32)
+        y = rms_norm(y.astype(x.dtype), p["norm_scale"], cfg.norm_eps).astype(
+            jnp.float32
+        )
+
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"].astype(x.dtype)
+    new_state = {"conv": new_conv, "h": new_h}
+    return y, new_state
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.expand * d
+    n = cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.d_conv - 1, di), dtype)
+    if cfg.ssm == "mamba1":
+        h = jnp.zeros((batch, di, n), jnp.float32)
+    else:
+        h = jnp.zeros((batch, di // MAMBA2_HEAD, MAMBA2_HEAD, n), jnp.float32)
+    return {"conv": conv, "h": h}

@@ -1,0 +1,207 @@
+"""Per-architecture smoke tests: REDUCED configs of each family run one
+forward/train step and one decode step on CPU, asserting output shapes
+and finiteness (the assignment's smoke requirement). Full configs are
+exercised only through the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as configs
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = configs.all_names()
+
+
+def _batch(cfg, b=2, s=64):
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    batch = {"tokens": tokens, "targets": tokens}
+    if cfg.frontend:
+        batch["frontend"] = (
+            jax.random.normal(KEY, (b, cfg.frontend_len, cfg.d_model)) * 0.02
+        )
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_smoke(name):
+    cfg = configs.get(name).reduced()
+    params = T.init_params(KEY, cfg, L.FP32)
+    batch = _batch(cfg)
+    loss, grads = jax.jit(
+        jax.value_and_grad(lambda p: T.loss_fn(p, batch, cfg, L.FP32))
+    )(params)
+    assert np.isfinite(float(loss))
+    assert 3.0 < float(loss) < 9.0  # ~ln(vocab) at init
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g)).all()
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_step_smoke(name):
+    cfg = configs.get(name).reduced()
+    params = T.init_params(KEY, cfg, L.FP32)
+    b = 2
+    cache = T.init_cache(cfg, b, 128, L.FP32)
+    lengths = jnp.array([3, 7], jnp.int32)
+    tok = jax.random.randint(KEY, (b, 1), 0, cfg.vocab)
+    enc_out = None
+    if cfg.enc_dec:
+        frames = jax.random.normal(KEY, (b, cfg.frontend_len, cfg.d_model)) * 0.02
+        enc_out = T._encode(params, frames, cfg, L.FP32)
+    logits, new_cache = jax.jit(
+        lambda p, t, c, l, e: T.decode_step(p, t, c, l, cfg, L.FP32, enc_out=e)
+    )(params, tok, cache, lengths, enc_out)
+    assert logits.shape == (b, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    # cache must actually change (the RAW frontier advanced)
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b_))
+        for a, b_ in zip(jax.tree.leaves(cache), jax.tree.leaves(new_cache))
+    )
+    assert changed
+
+
+def test_decode_matches_forward_gqa():
+    """Teacher-forced decode must reproduce the training forward's
+    next-token logits (the KV frontier semantics are exact)."""
+    cfg = configs.get("qwen3-14b").reduced()
+    params = T.init_params(KEY, cfg, L.FP32)
+    b, s = 1, 16
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    hidden = T.forward_hidden(params, tokens, cfg, L.FP32)
+    w_out = params["lm_head"]
+    ref_logits = hidden[:, -1].astype(jnp.float32) @ w_out.astype(jnp.float32)
+
+    cache = T.init_cache(cfg, b, 32, L.FP32)
+    lengths = jnp.zeros((b,), jnp.int32)
+    for t in range(s):
+        logits, cache = T.decode_step(
+            params, tokens[:, t:t + 1], cache, lengths, cfg, L.FP32
+        )
+        lengths = lengths + 1
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(ref_logits), atol=2e-3, rtol=1e-3
+    )
+
+
+def test_decode_matches_forward_mamba():
+    """Chunked scan (train) == stepwise recurrence (decode)."""
+    cfg = configs.get("falcon-mamba-7b").reduced()
+    params = T.init_params(KEY, cfg, L.FP32)
+    b, s = 1, 32
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    hidden = T.forward_hidden(params, tokens, cfg, L.FP32)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ref_logits = hidden[:, -1].astype(jnp.float32) @ w_out.astype(jnp.float32)
+
+    cache = T.init_cache(cfg, b, s, L.FP32)
+    lengths = jnp.zeros((b,), jnp.int32)
+    for t in range(s):
+        logits, cache = T.decode_step(
+            params, tokens[:, t:t + 1], cache, lengths, cfg, L.FP32
+        )
+        lengths = lengths + 1
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(ref_logits), atol=2e-3, rtol=1e-3
+    )
+
+
+def test_gemma3_ring_buffer_cache_sizes():
+    cfg = configs.get("gemma3-4b").reduced()
+    cache = T.init_cache(cfg, batch=2, max_seq=128, dt=L.FP32)
+    lk, _ = cache["local_kv"]
+    gk, _ = cache["global_kv"]
+    assert lk.shape[2] == cfg.sliding_window  # ring capacity == window
+    assert gk.shape[2] == 128
+    assert lk.shape[0] + gk.shape[0] == cfg.n_layers
+
+
+def test_mla_cache_is_latent():
+    cfg = configs.get("minicpm3-4b").reduced()
+    cache = T.init_cache(cfg, batch=2, max_seq=64, dt=L.FP32)
+    lat, kr = cache["mla"]
+    assert lat.shape[-1] == cfg.kv_lora_rank  # latent, not per-head KV
+    assert kr.shape[-1] == cfg.qk_rope_dim
+
+
+def test_mamba1_chunked_matches_stepwise():
+    """The chunked selective scan (DESIGN.md §3.3 RAW chain) equals the
+    recurrent decode step applied position by position."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        configs.get("falcon-mamba-7b").reduced(), ssm_chunk=8
+    )
+    di, n = cfg.expand * 16, cfg.ssm_state
+    key = jax.random.PRNGKey(3)
+    p = S.mamba_init(key, dataclasses.replace(cfg, d_model=16), L.FP32)
+    b, s = 2, 32
+    xi = jax.random.normal(key, (b, s, di)) * 0.5
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    y_chunk, h_chunk = S._mamba1_chunked(
+        p, xi, dataclasses.replace(cfg, d_model=16), h0, 8
+    )
+    h = h0
+    for t in range(s):
+        y_t, h = S._mamba1_step(p, xi[:, t], h)
+        np.testing.assert_allclose(
+            np.asarray(y_chunk[:, t]), np.asarray(y_t), rtol=1e-4, atol=1e-5
+        )
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_mamba2_chunked_matches_stepwise():
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        configs.get("zamba2-7b").reduced(), ssm_chunk=8
+    )
+    d = 32
+    cfg16 = dataclasses.replace(cfg, d_model=d)
+    di, n = cfg.expand * d, cfg.ssm_state
+    nh = di // S.MAMBA2_HEAD if di >= S.MAMBA2_HEAD else 1
+    key = jax.random.PRNGKey(4)
+    p = S.mamba_init(key, cfg16, L.FP32)
+    b, s = 2, 32
+    nh = di // S.MAMBA2_HEAD
+    xr = jax.random.normal(key, (b, s, d)) * 0.5
+    xh = jax.random.normal(jax.random.PRNGKey(5), (b, s, di)) * 0.5
+    h0 = jnp.zeros((b, nh, S.MAMBA2_HEAD, n), jnp.float32)
+    y_chunk, h_chunk = S._mamba2_chunked(p, xr, xh, cfg16, h0, 8)
+    h = h0
+    for t in range(s):
+        y_t, h = S._mamba2_step(
+            p, xr[:, t], xh[:, t].reshape(b, nh, S.MAMBA2_HEAD), h, n
+        )
+        np.testing.assert_allclose(
+            np.asarray(y_chunk[:, t]),
+            np.asarray(y_t.reshape(b, di)),
+            rtol=1e-3, atol=1e-4,
+        )
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_n_params_scale():
+    """Config parameter estimates land near the advertised model sizes."""
+    approx = {
+        "internvl2-76b": 76e9,
+        "starcoder2-7b": 7e9,
+        "qwen3-14b": 14e9,
+        "falcon-mamba-7b": 7e9,
+        "phi3.5-moe-42b-a6.6b": 42e9,
+    }
+    for name, target in approx.items():
+        n = configs.get(name).n_params()
+        assert 0.5 * target < n < 1.7 * target, (name, n)
+
+
+def test_moe_active_params_below_total():
+    cfg = configs.get("phi3.5-moe-42b-a6.6b")
+    assert cfg.n_active_params() < 0.35 * cfg.n_params()

@@ -1,0 +1,148 @@
+"""Unit tests for the chain-of-recurrences algebra and §3 monotonicity."""
+
+import pytest
+
+from repro.core import cr
+from repro.core import loopir as ir
+from repro.core import monotonic as mono
+
+
+def test_row_major_affine_and_monotonic():
+    # paper §3.2: {{0,+,N},+,1} — affine and monotonic
+    n = cr.CSym("N", 1, 1000)
+    outer = cr.CR(cr.CConst(0), "+", n, 1)
+    expr = cr.cr_add(outer, cr.CR(cr.CConst(0), "+", cr.CConst(1), 2))
+    assert cr.is_monotonic_expr(expr)
+    assert cr.is_affine_expr(expr)
+
+
+def test_fft_traversal_monotonic_not_affine():
+    # paper §3.2: {{0,+,1},+,{2,×,2}} — monotonic, not affine
+    stride = cr.CR(cr.CConst(2), "*", cr.CConst(2), 1)
+    expr = cr.CR(cr.CR(cr.CConst(0), "+", cr.CConst(1), 1), "+", stride, 2)
+    assert cr.is_monotonic_expr(expr)
+    assert not cr.is_affine_expr(expr)
+
+
+def test_negative_step_not_monotonic():
+    expr = cr.CR(cr.CConst(100), "+", cr.CConst(-1), 1)
+    assert not cr.is_monotonic_expr(expr)
+
+
+def _analyze(addr, loops):
+    prog = ir.Program("t", loops=loops)
+    op, path = prog.mem_ops()[0]
+    return mono.analyze_op(op, path)
+
+
+def test_row_major_outer_monotonic():
+    # addr = i*M + j with trips (N, M): outer step M == inner step*trip M
+    # -> NOT lower -> outer depth monotonic (paper §3.4.1 example)
+    m = ir.Param("M", 1, 64)
+    loops = (
+        ir.Loop("i", ir.Param("N", 1, 64), (
+            ir.Loop("j", m, (
+                ir.Load("ld", "A", ir.Var("i") * m + ir.Var("j")),
+            )),
+        )),
+    )
+    info = _analyze(None, loops)
+    assert info.innermost_monotonic
+    assert info.non_monotonic == frozenset()
+    assert info.affine
+
+
+def test_column_major_outer_non_monotonic():
+    # addr = j*M + i: outer step 1 < inner contribution M*M
+    m = ir.Param("M", 2, 64)
+    loops = (
+        ir.Loop("i", ir.Param("N", 2, 64), (
+            ir.Loop("j", m, (
+                ir.Load("ld", "A", ir.Var("j") * m + ir.Var("i")),
+            )),
+        )),
+    )
+    info = _analyze(None, loops)
+    assert info.innermost_monotonic
+    assert info.non_monotonic == frozenset({1})
+
+
+def test_ivar_multiplicative_stride():
+    # FFT-style: addr = g * (2*half) + t, half *= 2 per stage:
+    # stage depth non-monotonic (reset), inner two depths monotonic
+    half = ir.Var("half")
+    loops = (
+        ir.Loop(
+            "s", ir.Param("S", 1, 16),
+            (
+                ir.Loop("g", ir.Param("G", 1, 64), (
+                    ir.Loop("t", half, (
+                        ir.Load(
+                            "ld", "A",
+                            ir.Var("g") * (half * 2) + ir.Var("t"),
+                        ),
+                    )),
+                )),
+            ),
+            ivars=(ir.IVar("half", ir.Const(1), "*", ir.Const(2)),),
+        ),
+    )
+    info = _analyze(None, loops)
+    assert info.innermost_monotonic
+    assert not info.affine
+    assert 1 in info.non_monotonic  # stage resets addresses
+    assert 2 not in info.non_monotonic  # group stride covers the t range
+
+
+def test_data_dependent_requires_hint():
+    loops = (
+        ir.Loop("i", ir.Param("N", 1, 64), (
+            ir.Load("ld", "A", ir.Read("idx", ir.Var("i"))),
+        )),
+    )
+    info = _analyze(None, loops)
+    assert not info.innermost_monotonic
+    assert info.non_monotonic == frozenset({1})
+
+    loops_hinted = (
+        ir.Loop("i", ir.Param("N", 1, 64), (
+            ir.Load(
+                "ld", "A", ir.Read("idx", ir.Var("i")),
+                hint=ir.MonotonicHint(True, frozenset()),
+            ),
+        )),
+    )
+    info2 = _analyze(None, loops_hinted)
+    assert info2.innermost_monotonic
+    assert info2.from_hint
+
+
+def test_constant_in_inner_loop_is_monotonic():
+    # addr = i (constant in the innermost loop): step 0 -> monotonic
+    loops = (
+        ir.Loop("i", ir.Param("N", 1, 64), (
+            ir.Loop("j", ir.Param("M", 1, 64), (
+                ir.Store("st", "A", ir.Var("i"), ir.Const(1.0)),
+            )),
+        )),
+    )
+    info = _analyze(None, loops)
+    assert info.innermost_monotonic
+    assert info.non_monotonic == frozenset()
+
+
+def test_symbolic_ge():
+    half = cr.CR(cr.CConst(1), "*", cr.CConst(2), 1)
+    two_half = cr.cr_mul(cr.CConst(2), half)
+    assert cr.symbolic_ge(two_half, half)
+    assert not cr.symbolic_ge(half, two_half)
+    m = cr.CSym("M", 1, cr.INF)
+    assert cr.symbolic_ge(m, m)
+
+
+def test_interval_arithmetic():
+    a = cr.Interval(1, 5)
+    b = cr.Interval(-2, 3)
+    assert (a + b) == cr.Interval(-1, 8)
+    assert (a * b) == cr.Interval(-10, 15)
+    assert (a - b) == cr.Interval(-2, 7)

@@ -1,0 +1,184 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, gradient
+compression, fault tolerance."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.data.pipeline import DataConfig, ShardedLoader, shard_batch_at
+from repro.distributed.fault import FaultConfig, FaultTolerantLoop
+from repro.optim import adamw, compression
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_deterministic():
+    cfg = DataConfig(vocab=1000, seq_len=64, global_batch=8)
+    a = shard_batch_at(cfg, step=3, shard=0, n_shards=1)
+    b = shard_batch_at(cfg, step=3, shard=0, n_shards=1)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_pipeline_elastic_resharding():
+    """The global stream is identical under any shard count."""
+    cfg = DataConfig(vocab=1000, seq_len=64, global_batch=8)
+    whole = shard_batch_at(cfg, 5, 0, 1)["tokens"]
+    parts = np.concatenate(
+        [shard_batch_at(cfg, 5, s, 4)["tokens"] for s in range(4)]
+    )
+    np.testing.assert_array_equal(whole, parts)
+
+
+def test_pipeline_resume_state():
+    cfg = DataConfig(vocab=100, seq_len=32, global_batch=2)
+    l1 = ShardedLoader(cfg)
+    next(l1)
+    next(l1)
+    state = l1.state()
+    l2 = ShardedLoader(cfg)
+    l2.restore(state)
+    np.testing.assert_array_equal(next(l1)["tokens"], next(l2)["tokens"])
+
+
+def test_pipeline_packing_structure():
+    cfg = DataConfig(vocab=5000, seq_len=256, global_batch=1)
+    row = shard_batch_at(cfg, 0, 0, 1)["tokens"][0]
+    assert row[0] == cfg.bos
+    assert (row == cfg.bos).sum() >= 1
+    assert row.max() < cfg.vocab
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_quadratic_convergence():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw.init_state(params)
+    cfg = adamw.AdamWConfig(lr=0.2, weight_decay=0.0, warmup_steps=0,
+                            total_steps=200, clip_norm=100.0)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_clipping_and_schedule():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(adamw.lr_at(cfg, 0)) == 0.0
+    assert float(adamw.lr_at(cfg, 10)) == pytest.approx(1.0, rel=0.01)
+    assert float(adamw.lr_at(cfg, 100)) == pytest.approx(
+        cfg.min_lr_ratio, rel=0.05
+    )
+    params = {"w": jnp.ones(4)}
+    state = adamw.init_state(params)
+    _, _, m = adamw.apply_updates(
+        params, {"w": jnp.ones(4) * 1e6}, state, cfg
+    )
+    assert float(m["grad_norm"]) > cfg.clip_norm  # recorded pre-clip
+
+
+def test_compression_error_feedback_unbiased():
+    """EF quantization: accumulated updates converge to the true sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(256) * 0.01)
+    params = {"g": g_true}
+    err = compression.init_error_state(params)
+    total = np.zeros(256)
+    for _ in range(50):
+        comp, err = compression.ef_compress_grads({"g": g_true}, err)
+        total += np.asarray(comp["g"])
+    np.testing.assert_allclose(
+        total / 50, np.asarray(g_true), atol=2e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4))}}
+    ckpt.save(tree, str(tmp_path), step=7)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = ckpt.restore(like, str(tmp_path))
+    assert step == 7
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    tree = {"a": jnp.arange(4.0)}
+    ckpt.save(tree, str(tmp_path), step=1)
+    # a stale tmp dir must never be picked up
+    os.makedirs(str(tmp_path / "step_00000002.tmp"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    saver = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        saver.save({"a": jnp.full((4,), float(s))}, s)
+    saver.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2
+    restored, _ = ckpt.restore({"a": jnp.zeros(4)}, str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.full(4, 4.0))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_fault_loop_recovers_from_failures(tmp_path):
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=2)
+    loader = ShardedLoader(cfg)
+    fail_at = {5}
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] in fail_at:
+            raise RuntimeError("injected node failure")
+        return {"w": state["w"] + 1}, {"loss": float(state["w"])}
+
+    loop = FaultTolerantLoop(
+        step_fn, {"w": 0}, loader,
+        FaultConfig(checkpoint_dir=str(tmp_path), checkpoint_every=2,
+                    backoff_s=0.0),
+    )
+    metrics = loop.run(10)
+    assert len(metrics) == 10
+    assert loop.recoveries == 1
+
+
+def test_fault_loop_straggler_detection(tmp_path):
+    import time
+
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=2)
+    loader = ShardedLoader(cfg)
+
+    def step_fn(state, batch):
+        if loader.step == 6:
+            time.sleep(0.25)
+        else:
+            time.sleep(0.005)
+        return state, {"loss": 0.0}
+
+    loop = FaultTolerantLoop(
+        step_fn, {}, loader,
+        FaultConfig(checkpoint_dir=str(tmp_path), checkpoint_every=100),
+    )
+    loop.run(10)
+    assert any(step == 5 for step, _ in loop.straggler_events)
