@@ -1,0 +1,97 @@
+"""Engine benchmark: cycle vs event engine wall-clock and conformance.
+
+Produces the evidence file committed as ``BENCH_ENGINE.json``:
+
+  * per Table-1 kernel, FUS2 (and LSQ at 1x) wall-clock of both engines
+    at the paper_table1 scales, plus the event engine alone at
+    ``--scale-mult`` (default 8x — the cycle engine is too slow there,
+    which is the point),
+  * cycle-count drift between engines (conformance contract: <= 2%,
+    see DESIGN.md §1.2),
+  * the tier-1 suite wall-clock, if provided via --tier1-seconds.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_engine.py \
+        --out BENCH_ENGINE.json --tier1-seconds 36.4 --tier1-seed-seconds 164
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import programs, simulator
+from benchmarks.paper_table1 import SCALES, scaled
+
+
+def _run(prog, arrays, params, mode, engine):
+    t0 = time.time()
+    res = simulator.simulate(prog, arrays, params, mode=mode, engine=engine)
+    return time.time() - t0, res
+
+
+def bench(scale_mult: int = 8, modes=("LSQ", "FUS2")) -> dict:
+    out = {
+        "scales_1x": dict(SCALES),
+        "scale_mult": scale_mult,
+        "kernels": {},
+    }
+    for name in programs.TABLE1:
+        row: dict = {}
+        prog, arrays, params = programs.get(name).make(SCALES[name])
+        for mode in modes:
+            t_cy, r_cy = _run(prog, arrays, params, mode, "cycle")
+            t_ev, r_ev = _run(prog, arrays, params, mode, "event")
+            drift = abs(r_ev.cycles - r_cy.cycles) / max(r_cy.cycles, 1)
+            row[mode] = {
+                "cycles_cycle": r_cy.cycles,
+                "cycles_event": r_ev.cycles,
+                "cycle_drift": round(drift, 6),
+                "wall_cycle_s": round(t_cy, 3),
+                "wall_event_s": round(t_ev, 3),
+                "speedup": round(t_cy / max(t_ev, 1e-9), 2),
+            }
+        big = scaled(scale_mult)[name]
+        prog, arrays, params = programs.get(name).make(big)
+        t_ev, r_ev = _run(prog, arrays, params, "FUS2", "event")
+        row["FUS2_at_mult"] = {
+            "scale": big,
+            "wall_event_s": round(t_ev, 3),
+            "cycles": r_ev.cycles,
+            "requests": r_ev.dram_requests,
+        }
+        out["kernels"][name] = row
+        top = row[modes[-1]]
+        print(f"{name:10s} done: 1x {modes[-1]} {top['wall_cycle_s']}s cycle "
+              f"-> {top['wall_event_s']}s event; "
+              f"{scale_mult}x event {t_ev:.2f}s", flush=True)
+    drifts = [
+        row[m]["cycle_drift"]
+        for row in out["kernels"].values()
+        for m in modes
+    ]
+    out["max_cycle_drift"] = max(drifts)
+    out["conformance_tolerance"] = 0.02
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_ENGINE.json")
+    ap.add_argument("--scale-mult", type=int, default=8)
+    ap.add_argument("--tier1-seconds", type=float, default=None)
+    ap.add_argument("--tier1-seed-seconds", type=float, default=None)
+    a = ap.parse_args()
+    data = bench(scale_mult=a.scale_mult)
+    if a.tier1_seconds is not None:
+        data["tier1_wall_s"] = a.tier1_seconds
+    if a.tier1_seed_seconds is not None:
+        data["tier1_seed_wall_s"] = a.tier1_seed_seconds
+    with open(a.out, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    print(f"wrote {a.out}: max drift {data['max_cycle_drift']:.4%}")
+
+
+if __name__ == "__main__":
+    main()

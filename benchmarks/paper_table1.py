@@ -18,7 +18,9 @@ from repro.core import loopir, programs, simulator
 
 MODES = ("STA", "LSQ", "FUS1", "FUS2")
 
-# benchmark scales sized so the full table runs in ~a minute on CPU
+# benchmark scales sized so the full table runs in ~a minute on CPU with
+# the cycle engine; the event engine (default) runs these much faster
+# and supports --scale-mult well beyond 8x (see BENCH_ENGINE.json)
 SCALES = {
     "RAWloop": 2048, "WARloop": 2048, "WAWloop": 2048,
     "bnn": 64, "pagerank": 96, "fft": 256, "matpower": 64,
@@ -26,17 +28,31 @@ SCALES = {
 }
 
 
-def run_table(scales=None, validate=False):
+def scaled(mult: int) -> dict[str, int]:
+    """SCALES at an integer multiple (fft stays a power of two)."""
+    if mult < 1:
+        raise ValueError(f"--scale-mult must be >= 1, got {mult}")
+    out = {}
+    for k, v in SCALES.items():
+        s = v * mult
+        if k == "fft":
+            s = 1 << (s.bit_length() - 1)
+        out[k] = s
+    return out
+
+
+def run_table(scales=None, validate=False, engine="event"):
     scales = scales or SCALES
     rows = []
-    for name in programs.all_names():
+    for name in programs.TABLE1:
         prog, arrays, params = programs.get(name).make(scales[name])
         oracle = loopir.interpret(prog, arrays, params)
         row = {"kernel": name}
         for mode in MODES:
             t0 = time.time()
             res = simulator.simulate(
-                prog, arrays, params, mode=mode, validate=validate and mode != "STA"
+                prog, arrays, params, mode=mode,
+                validate=validate and mode != "STA", engine=engine,
             )
             for k in oracle:
                 assert np.allclose(res.arrays[k], oracle[k], atol=1e-9), (
@@ -69,8 +85,8 @@ def summarize(rows):
     return out
 
 
-def main(csv=True):
-    rows = run_table()
+def main(csv=True, scale_mult=1, engine="event"):
+    rows = run_table(scales=scaled(scale_mult), engine=engine)
     if csv:
         print("kernel,PEs,STA,LSQ,FUS1,FUS2,fus2_vs_sta,fus2_vs_lsq,forwards")
         for r in rows:
@@ -88,4 +104,11 @@ def main(csv=True):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale-mult", type=int, default=1,
+                    help="run Table 1 at N x the default scales")
+    ap.add_argument("--engine", choices=("cycle", "event"), default="event")
+    a = ap.parse_args()
+    main(scale_mult=a.scale_mult, engine=a.engine)

@@ -25,10 +25,10 @@ def _t(fn, *args, reps=3, **kw):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
-def bench_table1(emit):
-    from benchmarks.paper_table1 import run_table, summarize
+def bench_table1(emit, scale_mult=1, engine="event", scales=None):
+    from benchmarks.paper_table1 import run_table, scaled, summarize
 
-    rows = run_table()
+    rows = run_table(scales=scales or scaled(scale_mult), engine=engine)
     for r in rows:
         emit(
             f"table1_{r['kernel']}",
@@ -147,13 +147,37 @@ def bench_roofline_summary(emit):
     )
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="small-scale CI smoke: Table 1 + pruning only",
+    )
+    ap.add_argument(
+        "--scale-mult", type=int, default=1,
+        help="run Table 1 at N x the default scales (event engine "
+        "sustains >= 8x; see BENCH_ENGINE.json)",
+    )
+    ap.add_argument("--engine", choices=("cycle", "event"), default="event")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
 
     def emit(name, us, derived):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
-    bench_table1(emit)
+    if args.smoke:
+        from benchmarks.paper_table1 import scaled
+
+        smoke_scales = {k: max(v // 8, 16) for k, v in scaled(1).items()}
+        smoke_scales["fft"] = 64
+        bench_table1(emit, engine=args.engine, scales=smoke_scales)
+        bench_pruning(emit)
+        return
+
+    bench_table1(emit, scale_mult=args.scale_mult, engine=args.engine)
     bench_pruning(emit)
     bench_forwarding(emit)
     bench_waves(emit)

@@ -24,7 +24,7 @@ paper's benchmarks need it and we reject such programs explicitly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Optional, Union
 
 from repro.core import loopir as ir
 
@@ -227,6 +227,89 @@ def decouple(program: ir.Program) -> DAEResult:
         pe.cu_stmt_count = cu
 
     return DAEResult(pes=pes, op_to_pe=op_to_pe, fifo_edges=fifo_edges)
+
+
+class CU:
+    """Compute-unit thread of one PE (the value half of the AGU/CU
+    split): executes leaf iterations in order, consuming load values
+    (in-order FIFO per load op) and producing store values with §6 valid
+    bits. Shared by both simulator engines — the CU is inherently
+    sequential (loop-carried locals), so it stays a generator while the
+    engines vectorize everything around it."""
+
+    def __init__(self, pe: PE, arrays, params):
+        self.pe = pe
+        self.arrays = arrays
+        self.params = params
+        self.time = 0
+        self.done = False
+        self.waiting_on: Optional[str] = None
+        self.outbox: list[tuple[str, float, bool]] = []
+        self.gen = self._generator()
+        self._advance(prime=True)
+
+    def _generator(self):
+        pe = self.pe
+        by_depth: dict[int, list[ir.Stmt]] = {}
+        for s, d in pe.stmts:
+            by_depth.setdefault(d, []).append(s)
+
+        def ev(e, scope, loadvals):
+            return ir._eval(e, scope, self.arrays, self.params, loadvals)
+
+        def run_depth(d, scope):
+            loop = pe.path[d - 1]
+            loop_scope = ir._Env(scope)
+            for iv in loop.ivars:
+                loop_scope.define(iv.name, ev(iv.init, scope, {}))
+            trip = int(ev(loop.trip, scope, {}))
+            for i in range(trip):
+                body = ir._Env(loop_scope)
+                body.define(loop.var, i)
+                loadvals: dict[str, float] = {}
+                for s in by_depth.get(d, ()):
+                    if isinstance(s, ir.Load):
+                        v = yield ("need", s.id)
+                        loadvals[s.id] = v
+                    elif isinstance(s, ir.Store):
+                        valid = True
+                        if s.guard is not None:
+                            valid = bool(ev(s.guard, body, loadvals))
+                        val = ev(s.value, body, loadvals) if valid else 0.0
+                        self.outbox.append((s.id, val, valid))
+                    elif isinstance(s, ir.SetLocal):
+                        v = ev(s.value, body, loadvals)
+                        if not body.set_existing(s.name, v):
+                            body.define(s.name, v)
+                if d < pe.depth:
+                    yield from run_depth(d + 1, body)
+                for iv in loop.ivars:
+                    cur = loop_scope.get(iv.name)
+                    step = ev(iv.step, body, {})
+                    loop_scope.vals[iv.name] = (
+                        cur + step if iv.op == "+" else cur * step
+                    )
+
+        if pe.depth >= 1:
+            yield from run_depth(1, ir._Env())
+
+    def _advance(self, value: float = 0.0, prime: bool = False):
+        try:
+            item = next(self.gen) if prime else self.gen.send(value)
+            while True:
+                if item[0] == "need":
+                    self.waiting_on = item[1]
+                    return
+                item = next(self.gen)  # pragma: no cover (stores don't yield)
+        except StopIteration:
+            self.done = True
+            self.waiting_on = None
+
+    def feed(self, value: float, at_time: int):
+        assert self.waiting_on is not None
+        self.time = max(self.time, at_time)
+        self.waiting_on = None
+        self._advance(value)
 
 
 def _shared_depth_pe(a: PE, b: PE) -> int:

@@ -111,6 +111,24 @@ class Port:
         self.acked_count += 1
 
 
+def nodependence_bits(
+    pairs: list[hz.HazardPair], traces: dict[str, sched.OpTrace]
+) -> dict[tuple[str, str], np.ndarray]:
+    """Precompute the §5.6 NoDependence bit stream of every pair that
+    synthesizes the term: bit[i] is True when dst request i's address is
+    strictly above the youngest preceding src request's address (both
+    streams innermost-monotonic), i.e. no intra-loop dependence exists."""
+    out: dict[tuple[str, str], np.ndarray] = {}
+    for pr in pairs:
+        if not pr.nodependence:
+            continue
+        lt, st = traces[pr.dst], traces[pr.src]
+        idx = np.searchsorted(st.seq, lt.seq, side="left") - 1
+        prev = np.where(idx >= 0, st.addr[np.maximum(idx, 0)], -(2**62))
+        out[(pr.dst, pr.src)] = lt.addr > prev
+    return out
+
+
 def _cmp(a: int, b: int, op: str) -> bool:
     return a <= b if op == "<=" else a < b
 
@@ -180,3 +198,98 @@ def check_pair(
         return ok
 
     return False
+
+
+def check_pair_batch(
+    pair: hz.HazardPair,
+    req_sched: np.ndarray,  # (m, dst_depth) int64
+    req_addr: np.ndarray,  # (m,) int64
+    src,  # any object with frontier()/req_sched()/no_pending_ack
+    use_next_request: bool = False,
+    nodep_bits: Optional[np.ndarray] = None,  # (m,) bool, §5.6 slice
+    frontier: Optional[tuple] = None,  # per-request frontier override
+    next_state: Optional[tuple] = None,  # per-request (next_sched_k, no_pend)
+) -> np.ndarray:
+    """Vectorized ``check_pair``: evaluate the synthesized Hazard Safety
+    Check for ``m`` consecutive dst requests. Returns an (m,) bool array.
+
+    By default the src frontier is frozen at its current state for the
+    whole batch — sound, because a pass certifies the permanent
+    program-order/completion fact the paper's check establishes (ACKs
+    are irreversible and the remaining src stream only moves forward in
+    program order), so a request that passes against a frontier observed
+    at cycle t may issue at any cycle >= t with identical memory
+    semantics. The event engine passes per-request overrides for the
+    terms that would otherwise leak *future* src state into earlier
+    cycles of a wave:
+
+      * ``frontier`` = (f_sched (m, d_src), f_addr (m,), f_last (m, d_src))
+        — used for the §5.5 forwarding variant, reconstructed from the
+        src port's stamped issue cycles;
+      * ``next_state`` = (next_sched_k (m,), no_pending_ack (m,)) — the
+        second Program-Order line, likewise time-reconstructed.
+
+    Term-for-term mirror of ``check_pair``; tests assert elementwise
+    equivalence against the scalar version.
+    """
+    m = len(req_addr)
+    k = pair.shared_depth
+    le = pair.comparator == "<="
+
+    if frontier is not None:
+        f_sched_rows, f_addr, f_last_rows = frontier
+    else:
+        f_sched, f_addr, f_lastiter = src.frontier(use_next_request)
+
+    def f_sched_at(depth: int):
+        if frontier is not None:
+            return f_sched_rows[:, depth - 1]
+        return f_sched[depth - 1]
+
+    # --- Program Order Safety Check (§5.2) ---
+    # terms are Python bools or (m,) arrays; | and & broadcast either way
+    if k == 0:
+        po = pair.dst_before_src
+    else:
+        col = req_sched[:, k - 1]
+        fk = f_sched_at(k)
+        po = (col <= fk) if le else (col < fk)
+        if not use_next_request:
+            if next_state is not None:
+                next_sched_k, no_pend = next_state
+            else:
+                next_sched_k = src.req_sched()[k - 1]
+                no_pend = src.no_pending_ack
+            second = (col <= next_sched_k) if le else (col < next_sched_k)
+            po = po | (second & no_pend)
+
+    # --- No Address Reset Check (§5.3) ---
+    if frontier is not None:
+        reset = True
+        for j in pair.lastiter_depths:
+            reset = reset & f_last_rows[:, j - 1]
+    else:
+        reset = all(f_lastiter[j - 1] for j in pair.lastiter_depths)
+    if pair.l_depth is not None:
+        l = pair.l_depth
+        fl = f_sched_at(l)
+        # sentinel frontier: source fully complete, no reset possible
+        reset = reset & ((req_sched[:, l - 1] == fl + pair.delta) | (fl >= SENTINEL))
+
+    ok = po
+
+    # --- §5.6 NoDependence term (intra-loop RAW) ---
+    if pair.nodependence and nodep_bits is not None:
+        ok = ok | (nodep_bits & reset)
+
+    # --- address frontier comparison (§3.1 monotonicity) ---
+    if pair.use_frontier:
+        ok = ok | ((req_addr < f_addr) & reset)
+    else:
+        # the addr disjunct is not synthesized; it still admits when the
+        # source frontier is the completion sentinel
+        ok = ok | ((req_addr < f_addr) & reset & (f_addr >= SENTINEL))
+
+    if np.ndim(ok) == 0:
+        return np.full(m, bool(ok))
+    return ok

@@ -98,7 +98,15 @@ class HazardPlan:
     protected_arrays: list[str]
 
     def pairs_for_dst(self, op_id: str) -> list[HazardPair]:
-        return [p for p in self.pairs if p.dst == op_id]
+        return self.by_dst().get(op_id, [])
+
+    def by_dst(self) -> dict[str, list[HazardPair]]:
+        """Kept pairs grouped by gated op, preserving plan order (the
+        order both engines consult frontiers and resolve forward ties)."""
+        out: dict[str, list[HazardPair]] = {}
+        for p in self.pairs:
+            out.setdefault(p.dst, []).append(p)
+        return out
 
     def summary(self) -> str:
         total = len(self.pairs) + len(self.pruned)

@@ -506,3 +506,8 @@ def get(name: str) -> Bench:
 
 def all_names() -> list[str]:
     return list(REGISTRY)
+
+
+# the nine Table-1 kernels, in the paper's order (the registry above is
+# populated in exactly this order; the tuple is the stable public name)
+TABLE1: tuple[str, ...] = tuple(REGISTRY)

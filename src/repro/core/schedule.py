@@ -57,6 +57,67 @@ class PETrace:
     n_leaf_iters: int  # total leaf-body invocations (for timing models)
 
 
+def instance_rank_table(
+    traces: dict[str, OpTrace],
+    dae: "daelib.DAEResult",
+    loop_pos: dict[int, int],
+    op_pos: dict[str, int],
+    fuse_group: dict[int, int],
+    op_path: dict[str, tuple],
+    key_len: Optional[int] = None,
+) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    """Vectorized leaf-loop *instance* ranking of every request.
+
+    Builds the polyhedral 2d+1 key of each request (static positions and
+    per-depth counters interleaved, trailing leaf counter dropped so all
+    iterations of one leaf instance share a key; fused siblings share the
+    group leader's leaf position) as one int64 matrix per op, then ranks
+    all requests globally with a single lexicographic ``np.unique``.
+
+    Returns (per-op rank array aligned with the op's request stream,
+    per-rank total request count). Replaces a per-request Python loop —
+    this is what lets the sequential (LSQ) window logic run at paper
+    scales.
+    """
+    if key_len is None and traces:
+        # widest key any op can need: positions+counters interleaved for
+        # every depth plus a trailing position slot
+        key_len = max(2 * tr.depth + 1 for tr in traces.values())
+    mats = []
+    ops = sorted(traces)
+    for op_id in ops:
+        tr = traces[op_id]
+        pe = dae.pes[tr.pe_id]
+        path = op_path[op_id]
+        key = np.full((tr.n_req, key_len), -1, dtype=np.int64)
+        if tr.depth == pe.depth:
+            for j in range(tr.depth - 1):
+                key[:, 2 * j] = loop_pos[id(path[j])]
+                key[:, 2 * j + 1] = tr.sched[:, j]
+            leader = dae.pes[fuse_group[tr.pe_id]]
+            key[:, 2 * (tr.depth - 1)] = loop_pos[id(leader.leaf)]
+        else:  # parent-body op: its own micro-instance per iteration
+            for j in range(tr.depth):
+                key[:, 2 * j] = loop_pos[id(path[j])]
+                key[:, 2 * j + 1] = tr.sched[:, j]
+            key[:, 2 * tr.depth] = op_pos[op_id]
+        mats.append(key)
+    if not mats:
+        return {}, np.zeros(0, dtype=np.int64)
+    stacked = np.concatenate(mats, axis=0)
+    _, inverse, counts = np.unique(
+        stacked, axis=0, return_inverse=True, return_counts=True
+    )
+    inverse = inverse.reshape(-1)
+    ranks: dict[str, np.ndarray] = {}
+    off = 0
+    for op_id in ops:
+        n = traces[op_id].n_req
+        ranks[op_id] = inverse[off : off + n]
+        off += n
+    return ranks, counts
+
+
 def trace_program(
     program: ir.Program,
     dae: daelib.DAEResult,

@@ -27,6 +27,13 @@ cycles and completes ``dram_latency`` cycles after issue; per-port
 dynamic coalescing closes a burst at ``burst_size`` requests or after
 ``burst_timeout`` idle cycles (§2.1.1, N=16). Each port moves at most
 one request per cycle (the paper's II=1 pipelines).
+
+Two engines implement the LSQ/FUS modes (``simulate(engine=...)``):
+this module's per-cycle reference ``Engine`` (scalar checks, one
+request per port per cycle — the conformance oracle and debugging aid)
+and the vectorized event-driven ``engine_event.EventEngine`` (the
+default: batched check waves, event-queue time skipping). See
+DESIGN.md §1.1-1.2 for the engine contract and drift tolerance.
 """
 
 from __future__ import annotations
@@ -240,84 +247,9 @@ class _Burst:
         self.complete_at = -1
 
 
-class _CU:
-    """Compute-unit thread of one PE: executes leaf iterations in order,
-    consuming load values (in-order FIFO per load op) and producing store
-    values with §6 valid bits."""
-
-    def __init__(self, pe: daelib.PE, arrays, params):
-        self.pe = pe
-        self.arrays = arrays
-        self.params = params
-        self.time = 0
-        self.done = False
-        self.waiting_on: Optional[str] = None
-        self.outbox: list[tuple[str, float, bool]] = []
-        self.gen = self._generator()
-        self._advance(prime=True)
-
-    def _generator(self):
-        pe = self.pe
-        by_depth: dict[int, list[ir.Stmt]] = {}
-        for s, d in pe.stmts:
-            by_depth.setdefault(d, []).append(s)
-
-        def ev(e, scope, loadvals):
-            return ir._eval(e, scope, self.arrays, self.params, loadvals)
-
-        def run_depth(d, scope):
-            loop = pe.path[d - 1]
-            loop_scope = ir._Env(scope)
-            for iv in loop.ivars:
-                loop_scope.define(iv.name, ev(iv.init, scope, {}))
-            trip = int(ev(loop.trip, scope, {}))
-            for i in range(trip):
-                body = ir._Env(loop_scope)
-                body.define(loop.var, i)
-                loadvals: dict[str, float] = {}
-                for s in by_depth.get(d, ()):
-                    if isinstance(s, ir.Load):
-                        v = yield ("need", s.id)
-                        loadvals[s.id] = v
-                    elif isinstance(s, ir.Store):
-                        valid = True
-                        if s.guard is not None:
-                            valid = bool(ev(s.guard, body, loadvals))
-                        val = ev(s.value, body, loadvals) if valid else 0.0
-                        self.outbox.append((s.id, val, valid))
-                    elif isinstance(s, ir.SetLocal):
-                        v = ev(s.value, body, loadvals)
-                        if not body.set_existing(s.name, v):
-                            body.define(s.name, v)
-                if d < pe.depth:
-                    yield from run_depth(d + 1, body)
-                for iv in loop.ivars:
-                    cur = loop_scope.get(iv.name)
-                    step = ev(iv.step, body, {})
-                    loop_scope.vals[iv.name] = (
-                        cur + step if iv.op == "+" else cur * step
-                    )
-
-        if pe.depth >= 1:
-            yield from run_depth(1, ir._Env())
-
-    def _advance(self, value: float = 0.0, prime: bool = False):
-        try:
-            item = next(self.gen) if prime else self.gen.send(value)
-            while True:
-                if item[0] == "need":
-                    self.waiting_on = item[1]
-                    return
-                item = next(self.gen)  # pragma: no cover (stores don't yield)
-        except StopIteration:
-            self.done = True
-            self.waiting_on = None
-
-    def feed(self, value: float, at_time: int):
-        assert self.waiting_on is not None
-        self.time = max(self.time, at_time)
-        self.waiting_on = None
-        self._advance(value)
+# Compute-unit thread: lives in dae.py (the CU half of the AGU/CU
+# split), shared by both engines. Kept under the old name for callers.
+_CU = daelib.CU
 
 
 class Engine:
@@ -341,38 +273,28 @@ class Engine:
         self.mem = {k: np.array(v, copy=True) for k, v in arrays.items()}
         self.params = params
         self.ports = {op_id: dulib.Port(tr) for op_id, tr in traces.items()}
-        self.pairs_by_dst: dict[str, list[hz.HazardPair]] = {}
-        for pr in comp.plan.pairs:
-            self.pairs_by_dst.setdefault(pr.dst, []).append(pr)
+        self.pairs_by_dst = comp.plan.by_dst()
 
         # §5.6 NoDependence bits
-        self.nodep_bits: dict[tuple[str, str], np.ndarray] = {}
-        for pr in comp.plan.pairs:
-            if pr.nodependence:
-                lt, st = traces[pr.dst], traces[pr.src]
-                idx = np.searchsorted(st.seq, lt.seq, side="left") - 1
-                prev = np.where(
-                    idx >= 0, st.addr[np.maximum(idx, 0)], -(2**62)
-                )
-                self.nodep_bits[(pr.dst, pr.src)] = lt.addr > prev
+        self.nodep_bits = dulib.nodependence_bits(comp.plan.pairs, traces)
 
         self.cus = {
-            pe.id: _CU(pe, self.mem, params) for pe in comp.dae.pes
+            pe.id: daelib.CU(pe, self.mem, params) for pe in comp.dae.pes
         }
         self.store_values: dict[str, list[tuple[int, float, bool]]] = {}
         self.ready_loads: dict[str, list[dulib.PendingEntry]] = {}
 
         if self.sequential:
             fuse = {pe.id: pe.id for pe in comp.dae.pes}  # LSQ: no fusion
-            order, _ = _instances(comp, traces, fuse)
-            self.inst_rank = {k: i for i, k in enumerate(order)}
-            self.inst_outstanding = [0] * len(order)
+            ranks, counts = schedlib.instance_rank_table(
+                traces, comp.dae, comp.loop_pos, comp.op_pos, fuse,
+                comp.op_path,
+            )
+            self.inst_outstanding = counts.tolist()
             self.req_inst: dict[tuple[str, int], int] = {}
-            for op_id, tr in traces.items():
-                for i in range(tr.n_req):
-                    r = self.inst_rank[_request_key(comp, tr, i, fuse)]
-                    self.req_inst[(op_id, i)] = r
-                    self.inst_outstanding[r] += 1
+            for op_id, r in ranks.items():
+                for i, rank in enumerate(r.tolist()):
+                    self.req_inst[(op_id, i)] = rank
             self.inst_window = 0
 
         self.open_bursts: dict[str, _Burst] = {}
@@ -714,22 +636,50 @@ def simulate(
     mode: str = "FUS2",
     sim: Optional[SimParams] = None,
     validate: bool = False,
+    engine: str = "event",
 ) -> SimResult:
-    assert mode in ("STA", "LSQ", "FUS1", "FUS2")
+    """Simulate ``program`` under one of the four evaluated systems.
+
+    ``engine`` selects the timing engine for LSQ/FUS modes:
+
+      * ``"event"`` (default) — vectorized event-driven engine
+        (core/engine_event.py): batched numpy hazard-check waves, time
+        advanced only at DRAM/CU/forwarding events. Identical final
+        arrays; cycle counts match the cycle engine within the tolerance
+        documented in DESIGN.md.
+      * ``"cycle"`` — the reference per-cycle engine: one request per
+        port per cycle, scalar checks, per-request issue logging when
+        validating. Slow; use for conformance and first-divergence
+        debugging.
+
+    STA is evaluated analytically and ignores ``engine``.
+    """
+    assert mode in ("STA", "LSQ", "FUS1", "FUS2"), f"unknown mode {mode!r}"
+    assert engine in ("cycle", "event"), f"unknown engine {engine!r}"
     params = params or {}
     p = sim or SimParams()
     comp = Compiled(program, forwarding=(mode == "FUS2"))
     traces = schedlib.trace_program(program, comp.dae, arrays, params)
     if mode == "STA":
         return _simulate_sta(comp, traces, arrays, params, p)
-    eng = Engine(comp, traces, arrays, params, mode, p)
+
+    oracle_loads: Optional[dict[str, list[float]]] = None
     if validate:
-        oracle_loads: dict[str, list[float]] = {}
+        oracle_loads = {}
 
         def hook(op_id, addr, is_store, valid, value):
             if not is_store:
                 oracle_loads.setdefault(op_id, []).append(value)
 
         ir.interpret(program, arrays, params, trace_hook=hook)
-        eng.oracle_loads = oracle_loads
+
+    if engine == "event":
+        from repro.core import engine_event
+
+        ev = engine_event.EventEngine(
+            comp, traces, arrays, params, mode, p, oracle_loads=oracle_loads
+        )
+        return ev.run()
+    eng = Engine(comp, traces, arrays, params, mode, p)
+    eng.oracle_loads = oracle_loads
     return eng.run()

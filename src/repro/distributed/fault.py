@@ -70,6 +70,10 @@ class FaultTolerantLoop:
                         self.step)
 
     def try_restore(self) -> bool:
+        # a failure can race an in-flight async save: without draining it
+        # we restore an older step and silently replay (and re-log) the
+        # steps in between
+        self.saver.wait()
         latest = ckpt.latest_step(self.cfg.checkpoint_dir)
         if latest is None:
             return False
@@ -79,7 +83,7 @@ class FaultTolerantLoop:
             shardings = {"state": self.state_shardings,
                          "data": {"step": None}}
         restored, step = ckpt.restore(
-            like, self.cfg.checkpoint_dir, shardings=None
+            like, self.cfg.checkpoint_dir, shardings=shardings
         )
         self.state = restored["state"]
         if self.state_shardings is not None:
@@ -114,9 +118,13 @@ class FaultTolerantLoop:
                             f"{self.cfg.max_retries} retries"
                         ) from e
                     time.sleep(self.cfg.backoff_s * 2 ** attempt)
-                    if not self.try_restore():
+                    if self.try_restore():
+                        # loader rewound with the checkpoint: re-fetch so
+                        # the retried step consumes the right batch and
+                        # the stream stays aligned with the step counter
+                        batch = next(self.loader)
+                    else:
                         log.warning("no checkpoint yet; retrying in place")
-                    batch = next(self.loader) if False else batch
             dt = time.monotonic() - t0
             self._watch_straggler(dt)
             metrics_log.append(metrics)

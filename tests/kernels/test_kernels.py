@@ -18,7 +18,14 @@ def keys(n):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("s,d", [(64, 33), (1000, 777), (257, 512)])
+@pytest.mark.parametrize(
+    "s,d",
+    [
+        (64, 33),
+        pytest.param(1000, 777, marks=pytest.mark.slow),
+        pytest.param(257, 512, marks=pytest.mark.slow),
+    ],
+)
 @pytest.mark.parametrize("hi", [10, 500])
 def test_du_hazard_sweep(s, d, hi):
     from repro.kernels.du_hazard.ops import hazard_frontier, hazard_frontier_ref
@@ -35,7 +42,13 @@ def test_du_hazard_sweep(s, d, hi):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("s,d,mem", [(100, 77, 64), (512, 333, 256)])
+@pytest.mark.parametrize(
+    "s,d,mem",
+    [
+        (100, 77, 64),
+        pytest.param(512, 333, 256, marks=pytest.mark.slow),
+    ],
+)
 def test_fused_stream_sweep(s, d, mem):
     from repro.kernels.du_hazard.ops import hazard_frontier_ref
     from repro.kernels.fused_stream.ops import fused_raw_loops, fused_stream_ref
@@ -78,7 +91,13 @@ def test_fused_stream_semantics_vs_loop():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("e,din,dout,bt,nb", [(4, 32, 48, 16, 8), (8, 16, 16, 8, 16)])
+@pytest.mark.parametrize(
+    "e,din,dout,bt,nb",
+    [
+        (4, 32, 48, 16, 8),
+        pytest.param(8, 16, 16, 8, 16, marks=pytest.mark.slow),
+    ],
+)
 @pytest.mark.parametrize("dtype", [jnp.float32])
 def test_group_matmul_sweep(e, din, dout, bt, nb, dtype):
     from repro.kernels.moe_group_mm.kernel import group_matmul
@@ -93,6 +112,7 @@ def test_group_matmul_sweep(e, din, dout, bt, nb, dtype):
     np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_ffn_dropless_vs_dense_oracle():
     from repro.kernels.moe_group_mm.ops import moe_ffn
 
@@ -126,7 +146,13 @@ def test_moe_ffn_dropless_vs_dense_oracle():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("s,d,causal", [(64, 32, True), (128, 16, False)])
+@pytest.mark.parametrize(
+    "s,d,causal",
+    [
+        (64, 32, True),
+        pytest.param(128, 16, False, marks=pytest.mark.slow),
+    ],
+)
 def test_flash_attention_kernel_sweep(s, d, causal):
     from repro.kernels.attention.ops import flash_attention, flash_attention_ref
 
@@ -223,6 +249,7 @@ def test_ssm_scan_kernel_sweep(s, di, n, chunk, bd):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ssm_scan_matches_model_path():
     """The kernel agrees with the model's chunked jnp scan end to end."""
     import dataclasses

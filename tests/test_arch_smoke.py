@@ -16,6 +16,25 @@ from repro.models import transformer as T
 KEY = jax.random.PRNGKey(0)
 ARCHS = configs.all_names()
 
+# tier-1 keeps one representative per family cheap enough for the CI
+# budget; the full sweep runs in the nightly slow tier (DESIGN.md §4)
+def _tier1_subset(names, keep):
+    missing = keep - set(names)
+    assert not missing, (
+        f"tier-1 keep-list names unknown archs {sorted(missing)}; "
+        "update the keep set or tier-1 silently loses its smoke coverage"
+    )
+    return [
+        n if n in keep else pytest.param(n, marks=pytest.mark.slow)
+        for n in names
+    ]
+
+
+ARCHS_TRAIN = _tier1_subset(ARCHS, {"qwen3-14b"})
+ARCHS_DECODE = _tier1_subset(
+    ARCHS, {"qwen3-14b", "whisper-tiny", "falcon-mamba-7b"}
+)
+
 
 def _batch(cfg, b=2, s=64):
     tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
@@ -27,7 +46,7 @@ def _batch(cfg, b=2, s=64):
     return batch
 
 
-@pytest.mark.parametrize("name", ARCHS)
+@pytest.mark.parametrize("name", ARCHS_TRAIN)
 def test_train_step_smoke(name):
     cfg = configs.get(name).reduced()
     params = T.init_params(KEY, cfg, L.FP32)
@@ -41,7 +60,7 @@ def test_train_step_smoke(name):
         assert np.isfinite(np.asarray(g)).all()
 
 
-@pytest.mark.parametrize("name", ARCHS)
+@pytest.mark.parametrize("name", ARCHS_DECODE)
 def test_decode_step_smoke(name):
     cfg = configs.get(name).reduced()
     params = T.init_params(KEY, cfg, L.FP32)
@@ -66,6 +85,7 @@ def test_decode_step_smoke(name):
     assert changed
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_gqa():
     """Teacher-forced decode must reproduce the training forward's
     next-token logits (the KV frontier semantics are exact)."""
@@ -89,6 +109,7 @@ def test_decode_matches_forward_gqa():
     )
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_mamba():
     """Chunked scan (train) == stepwise recurrence (decode)."""
     cfg = configs.get("falcon-mamba-7b").reduced()
@@ -129,6 +150,7 @@ def test_mla_cache_is_latent():
     assert kr.shape[-1] == cfg.qk_rope_dim
 
 
+@pytest.mark.slow
 def test_mamba1_chunked_matches_stepwise():
     """The chunked selective scan (DESIGN.md §3.3 RAW chain) equals the
     recurrent decode step applied position by position."""

@@ -1,0 +1,282 @@
+"""Differential conformance: the vectorized event engine against the
+reference cycle engine, across the full Table-1 × mode matrix, plus the
+edge cases the wave machinery has to get right (zero-request ops,
+sentinel-only streams, §6 misspeculation, §5.5 forwarding hits/misses)
+and elementwise scalar-vs-batch hazard-check equivalence.
+
+Contract (see DESIGN.md "Engine conformance"):
+  * final arrays: exactly equal (both engines are validated against the
+    sequential oracle; the comparison here is engine-vs-engine),
+  * cycle counts: equal within CYCLE_TOL relative drift — the event
+    engine freezes ACK frontiers over one inter-event gap per wave, so
+    port-order ties resolve slightly differently; everything else is
+    reconstructed per-cycle and matches exactly.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import loopir as ir
+from repro.core import programs, simulator
+
+MODES = ("STA", "LSQ", "FUS1", "FUS2")
+CYCLE_TOL = 0.02  # documented engine drift envelope (DESIGN.md)
+SCALE = 32  # small keeps the cycle-engine half inside the tier-1 budget
+
+
+def _scale(name):
+    return 64 if name == "fft" else SCALE
+
+
+def _both(prog, arrays, params, mode, sim=None):
+    cy = simulator.simulate(
+        prog, arrays, params, mode=mode, engine="cycle", sim=sim
+    )
+    ev = simulator.simulate(
+        prog, arrays, params, mode=mode, engine="event", validate=True, sim=sim
+    )
+    return cy, ev
+
+
+def _assert_conformant(cy, ev, label=""):
+    for k in cy.arrays:
+        np.testing.assert_array_equal(
+            ev.arrays[k], cy.arrays[k],
+            err_msg=f"{label}: engines diverged on array {k}",
+        )
+    drift = abs(ev.cycles - cy.cycles) / max(cy.cycles, 1)
+    assert drift <= CYCLE_TOL, (
+        f"{label}: cycle drift {drift:.3%} ({cy.cycles} vs {ev.cycles}) "
+        f"exceeds the documented {CYCLE_TOL:.0%} tolerance"
+    )
+
+
+# ---------------------------------------------------------------------------
+# the full Table-1 matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", programs.TABLE1)
+@pytest.mark.parametrize("mode", MODES)
+def test_engines_conform_on_table1(name, mode):
+    prog, arrays, params = programs.get(name).make(_scale(name))
+    oracle = ir.interpret(prog, arrays, params)
+    cy, ev = _both(prog, arrays, params, mode)
+    _assert_conformant(cy, ev, f"{name}/{mode}")
+    for k in oracle:  # and both match the sequential oracle
+        np.testing.assert_allclose(ev.arrays[k], oracle[k], atol=1e-12)
+    # same DRAM traffic: the wave engine batches issue, not bursts
+    assert ev.dram_requests == cy.dram_requests, (name, mode)
+    if mode != "STA":
+        assert ev.forwards == cy.forwards, (name, mode)
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+
+def _two_loop_raw(n1, n2, mem=32):
+    """Producer stores A[idx], consumer loads A[j] and stores B[j]."""
+    prog = ir.Program(
+        "edge",
+        loops=(
+            ir.Loop("i", ir.Param("n1", 0, n1), (
+                ir.Store("st_a", "A", ir.Var("i"), ir.Read("d", ir.Var("i")) * 2.0),
+            )),
+            ir.Loop("j", ir.Param("n2", 0, n2), (
+                ir.Load("ld_a", "A", ir.Var("j")),
+                ir.Store("st_b", "B", ir.Var("j"), ir.LoadVal("ld_a") + 1.0),
+            )),
+        ),
+        params=("n1", "n2"),
+    )
+    rng = np.random.default_rng(12)
+    arrays = {
+        "A": np.zeros(mem), "B": np.zeros(mem), "d": rng.standard_normal(mem),
+    }
+    return prog, arrays, {"n1": n1, "n2": n2}
+
+
+@pytest.mark.parametrize("mode", ("LSQ", "FUS1", "FUS2"))
+def test_zero_request_producer(mode):
+    """A zero-trip loop's ports emit only the §4.2(4) sentinel; the
+    consumer must drain against the sentinel frontier immediately."""
+    prog, arrays, params = _two_loop_raw(0, 16)
+    oracle = ir.interpret(prog, arrays, params)
+    cy, ev = _both(prog, arrays, params, mode)
+    _assert_conformant(cy, ev, f"zero-producer/{mode}")
+    np.testing.assert_allclose(ev.arrays["B"], oracle["B"], atol=1e-12)
+
+
+@pytest.mark.parametrize("mode", ("LSQ", "FUS1", "FUS2"))
+def test_zero_request_consumer(mode):
+    prog, arrays, params = _two_loop_raw(16, 0)
+    cy, ev = _both(prog, arrays, params, mode)
+    _assert_conformant(cy, ev, f"zero-consumer/{mode}")
+
+
+def test_whole_program_sentinel_only():
+    """Every loop zero-trip: nothing issues, memory untouched, 0-ish
+    cycles on both engines."""
+    prog, arrays, params = _two_loop_raw(0, 0)
+    cy, ev = _both(prog, arrays, params, "FUS2")
+    np.testing.assert_array_equal(ev.arrays["A"], arrays["A"])
+    np.testing.assert_array_equal(ev.arrays["B"], arrays["B"])
+    assert ev.dram_requests == cy.dram_requests == 0
+
+
+@pytest.mark.parametrize("mode", ("LSQ", "FUS1", "FUS2"))
+@pytest.mark.parametrize("frac", (0.0, 0.5, 1.0))
+def test_misspeculated_stores(mode, frac):
+    """§6: guarded stores speculate their requests; invalid ones must
+    ACK at the pending-buffer head without touching DRAM — including the
+    all-invalid case where the whole stream drains without a burst."""
+    n = 40
+    rng = np.random.default_rng(5)
+    v = rng.standard_normal(n)
+    # force the guard (v > 0) outcome for a controlled invalid fraction
+    v = np.abs(v) if frac == 0.0 else (-np.abs(v) if frac == 1.0 else v)
+    prog = ir.Program(
+        "spec",
+        loops=(
+            ir.Loop("i", ir.Param("n", 0, n), (
+                ir.Load("ld_v", "v", ir.Var("i")),
+                ir.Store(
+                    "st_v", "v", ir.Var("i"),
+                    ir.Un("tanh", ir.LoadVal("ld_v")),
+                    guard=ir.Bin(">", ir.LoadVal("ld_v"), ir.Const(0.0)),
+                ),
+            )),
+            ir.Loop("j", ir.Param("n", 0, n), (
+                ir.Load("ld_v2", "v", ir.Var("j")),
+                ir.Store("st_o", "o", ir.Var("j"), ir.LoadVal("ld_v2") * 3.0),
+            )),
+        ),
+        params=("n",),
+    )
+    arrays = {"v": v, "o": np.zeros(n)}
+    oracle = ir.interpret(prog, arrays, {"n": n})
+    cy, ev = _both(prog, arrays, {"n": n}, mode)
+    _assert_conformant(cy, ev, f"misspec/{mode}/{frac}")
+    np.testing.assert_allclose(ev.arrays["o"], oracle["o"], atol=1e-12)
+
+
+def test_forwarding_hits_and_misses():
+    """§5.5 hit/miss split: on bnn the producer's pending buffer drains
+    while the consumer walks its own sorted stream, so some loads
+    forward (hits) and the rest read committed memory (misses). Both
+    engines must agree on values AND on the split; latency extremes
+    shift the split identically on both."""
+    from repro.core.simulator import SimParams
+
+    prog, arrays, params = programs.get("bnn").make(48)
+    cy, ev = _both(prog, arrays, params, "FUS2")
+    _assert_conformant(cy, ev, "fwd/bnn")
+    n_loads = int(np.sum(arrays["rp2"][-1]))
+    assert 0 < ev.forwards, "expected at least one forwarding hit"
+    assert ev.forwards < n_loads, "expected at least one forwarding miss"
+    assert ev.forwards == cy.forwards
+
+    # a much longer DRAM latency keeps entries pending longer: strictly
+    # more hits, and the engines still agree
+    slow = SimParams(dram_latency=2000)
+    cy2, ev2 = _both(prog, arrays, params, "FUS2", sim=slow)
+    _assert_conformant(cy2, ev2, "fwd/bnn-slow")
+    assert ev2.forwards == cy2.forwards
+    assert ev2.forwards > ev.forwards
+
+
+def test_intra_loop_forwarding_hist():
+    """hist-style same-loop RAW (§5.6 NoDependence + forwarding): the
+    engines agree on forwards and final bins."""
+    prog, arrays, params = programs.get("hist+add").make(96)
+    cy, ev = _both(prog, arrays, params, "FUS2")
+    _assert_conformant(cy, ev, "hist-intra")
+    assert ev.forwards == cy.forwards
+
+
+# ---------------------------------------------------------------------------
+# scalar vs batch hazard-check equivalence (randomized, deterministic rng)
+# ---------------------------------------------------------------------------
+
+
+class _FakePort:
+    """Minimal frontier-state stub for check equivalence tests."""
+
+    def __init__(self, depth, f_sched, f_addr, f_last, nxt_sched, no_pend):
+        self.depth = depth
+        self._f = (tuple(f_sched), int(f_addr), tuple(f_last))
+        self._next = tuple(nxt_sched)
+        self.no_pending_ack = no_pend
+
+    def frontier(self, use_next_request):
+        if use_next_request:
+            return self._next, self._f[1], self._f[2]
+        return self._f
+
+    def req_sched(self):
+        return self._next
+
+
+def test_check_pair_batch_matches_scalar():
+    from repro.core import du as dulib
+    from repro.core import hazards as hz
+
+    rng = np.random.default_rng(0)
+    SEN = dulib.SENTINEL
+    for trial in range(300):
+        depth = int(rng.integers(1, 4))
+        k = int(rng.integers(0, depth + 1))
+        dst_before = bool(rng.integers(2))
+        nonmono = sorted(
+            int(d) for d in rng.choice(
+                range(1, depth + 1),
+                size=int(rng.integers(0, depth + 1)), replace=False,
+            )
+        )
+        l_cands = [d for d in nonmono if d <= k]
+        pair = hz.HazardPair(
+            dst="a", src="b", kind="RAW", array="A",
+            shared_depth=k, dst_before_src=dst_before,
+            wraparound=False, same_pe=bool(rng.integers(2)),
+            use_frontier=bool(rng.integers(2)),
+            l_depth=max(l_cands) if l_cands else None,
+            lastiter_depths=tuple(d for d in nonmono if d > k),
+            nodependence=bool(rng.integers(2)),
+        )
+        m = int(rng.integers(1, 9))
+        req_sched = rng.integers(0, 6, size=(m, depth)).astype(np.int64)
+        req_addr = rng.integers(0, 10, size=m).astype(np.int64)
+        f_sched = rng.integers(0, 6, size=depth).astype(np.int64)
+        if rng.integers(4) == 0:
+            f_sched[:] = SEN  # drained-source sentinel
+        f_addr = int(rng.integers(-2, 12))
+        if rng.integers(4) == 0:
+            f_addr = SEN
+        f_last = rng.integers(0, 2, size=depth).astype(bool)
+        nxt = np.maximum(f_sched, rng.integers(0, 8, size=depth)).astype(np.int64)
+        use_next = bool(rng.integers(2))
+        no_pend = bool(rng.integers(2))
+        src = _FakePort(depth, f_sched, f_addr, f_last, nxt, no_pend)
+        bits = rng.integers(0, 2, size=m).astype(bool)
+
+        got = dulib.check_pair_batch(
+            pair, req_sched, req_addr, src, use_next,
+            bits if pair.nodependence else None,
+        )
+        for i in range(m):
+            exp = dulib.check_pair(
+                pair,
+                tuple(int(x) for x in req_sched[i]),
+                int(req_addr[i]),
+                src,
+                use_next,
+                bool(bits[i]),
+            )
+            assert bool(got[i]) == exp, (
+                f"trial {trial} row {i}: batch={bool(got[i])} scalar={exp} "
+                f"pair={pair} req={req_sched[i]} addr={req_addr[i]} "
+                f"f=({f_sched},{f_addr},{f_last}) next={nxt} "
+                f"no_pend={no_pend} use_next={use_next}"
+            )

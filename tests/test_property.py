@@ -4,6 +4,11 @@ compiler analyses are conservative."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install .[test])",
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cr, executor, loopir as ir, simulator
@@ -64,11 +69,17 @@ def fused_pair_program(draw):
 
 
 @settings(max_examples=25, deadline=None)
-@given(fused_pair_program(), st.sampled_from(["LSQ", "FUS1", "FUS2"]))
-def test_random_monotonic_programs_preserve_semantics(pa, mode):
+@given(
+    fused_pair_program(),
+    st.sampled_from(["LSQ", "FUS1", "FUS2"]),
+    st.sampled_from(["cycle", "event"]),
+)
+def test_random_monotonic_programs_preserve_semantics(pa, mode, engine):
     prog, arrays, params = pa
     oracle = ir.interpret(prog, arrays, params)
-    res = simulator.simulate(prog, arrays, params, mode=mode, validate=True)
+    res = simulator.simulate(
+        prog, arrays, params, mode=mode, validate=True, engine=engine
+    )
     for k in oracle:
         np.testing.assert_allclose(res.arrays[k], oracle[k], atol=1e-9)
 

@@ -25,6 +25,7 @@ def test_paper_headline_fused_speedup_and_exactness():
         np.testing.assert_allclose(fus.arrays[k], oracle[k], atol=1e-12)
 
 
+@pytest.mark.slow
 def test_training_learns_tiny_model(tmp_path):
     from repro.launch import train
 
@@ -36,6 +37,7 @@ def test_training_learns_tiny_model(tmp_path):
     assert losses[-1] < losses[0] - 0.3  # actually learning
 
 
+@pytest.mark.slow
 def test_training_resume_exact(tmp_path):
     """Fault-tolerance invariant: 20 straight steps == 10 steps + crash +
     resume + 10 steps (bitwise data stream, same optimizer state)."""
