@@ -25,24 +25,57 @@ from repro.core import programs, simulator
 from benchmarks.paper_table1 import SCALES, scaled
 
 
-def _run(prog, arrays, params, mode, engine):
+def _run(prog, arrays, params, mode, engine, trace_mode="auto"):
     t0 = time.time()
-    res = simulator.simulate(prog, arrays, params, mode=mode, engine=engine)
+    res = simulator.simulate(
+        prog, arrays, params, mode=mode, engine=engine, trace_mode=trace_mode
+    )
     return time.time() - t0, res
 
 
-def bench(scale_mult: int = 8, modes=("LSQ", "FUS2")) -> dict:
+def smoke(trace_modes=("interp", "compiled")) -> None:
+    """Tier-1 CI smoke: every Table-1 kernel, event engine, FUS2, run
+    once per trace mode. Asserts the trace-mode contract: identical
+    final arrays AND identical cycle counts (the engine consumes equal
+    streams either way)."""
+    import numpy as np
+
+    for name in programs.TABLE1:
+        prog, arrays, params = programs.get(name).make(SCALES[name])
+        results = {}
+        for tm in trace_modes:
+            results[tm] = _run(prog, arrays, params, "FUS2", "event", tm)
+        (t0, r0), (t1, r1) = results[trace_modes[0]], results[trace_modes[1]]
+        assert r0.cycles == r1.cycles, (
+            f"{name}: cycles diverged across trace modes "
+            f"({trace_modes[0]}={r0.cycles}, {trace_modes[1]}={r1.cycles})"
+        )
+        for k in r0.arrays:
+            np.testing.assert_array_equal(
+                r0.arrays[k], r1.arrays[k],
+                err_msg=f"{name}: arrays diverged across trace modes ({k})",
+            )
+        print(
+            f"{name:10s} smoke OK: cycles={r0.cycles} "
+            + " ".join(f"{tm}={results[tm][0]:.3f}s" for tm in trace_modes),
+            flush=True,
+        )
+    print(f"smoke OK: {len(programs.TABLE1)} kernels x {trace_modes}")
+
+
+def bench(scale_mult: int = 8, modes=("LSQ", "FUS2"), trace_mode="auto") -> dict:
     out = {
         "scales_1x": dict(SCALES),
         "scale_mult": scale_mult,
+        "trace_mode": trace_mode,
         "kernels": {},
     }
     for name in programs.TABLE1:
         row: dict = {}
         prog, arrays, params = programs.get(name).make(SCALES[name])
         for mode in modes:
-            t_cy, r_cy = _run(prog, arrays, params, mode, "cycle")
-            t_ev, r_ev = _run(prog, arrays, params, mode, "event")
+            t_cy, r_cy = _run(prog, arrays, params, mode, "cycle", trace_mode)
+            t_ev, r_ev = _run(prog, arrays, params, mode, "event", trace_mode)
             drift = abs(r_ev.cycles - r_cy.cycles) / max(r_cy.cycles, 1)
             row[mode] = {
                 "cycles_cycle": r_cy.cycles,
@@ -54,7 +87,7 @@ def bench(scale_mult: int = 8, modes=("LSQ", "FUS2")) -> dict:
             }
         big = scaled(scale_mult)[name]
         prog, arrays, params = programs.get(name).make(big)
-        t_ev, r_ev = _run(prog, arrays, params, "FUS2", "event")
+        t_ev, r_ev = _run(prog, arrays, params, "FUS2", "event", trace_mode)
         row["FUS2_at_mult"] = {
             "scale": big,
             "wall_event_s": round(t_ev, 3),
@@ -82,8 +115,20 @@ def main():
     ap.add_argument("--scale-mult", type=int, default=8)
     ap.add_argument("--tier1-seconds", type=float, default=None)
     ap.add_argument("--tier1-seed-seconds", type=float, default=None)
+    ap.add_argument(
+        "--trace-mode", choices=("auto", "compiled", "interp"), default="auto",
+        help="AGU/CU front-end path for the benchmarked runs",
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tier-1 CI smoke: Table 1 at 1x, event engine, both trace "
+        "modes, conformance-asserted (no JSON output)",
+    )
     a = ap.parse_args()
-    data = bench(scale_mult=a.scale_mult)
+    if a.smoke:
+        smoke()
+        return
+    data = bench(scale_mult=a.scale_mult, trace_mode=a.trace_mode)
     if a.tier1_seconds is not None:
         data["tier1_wall_s"] = a.tier1_seconds
     if a.tier1_seed_seconds is not None:

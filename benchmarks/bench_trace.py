@@ -1,0 +1,156 @@
+"""Trace-compiler benchmark: AGU/CU front-end, interp vs compiled.
+
+Produces the evidence file committed as ``BENCH_TRACE.json``:
+
+  * per Table-1 kernel at ``--scale-mult`` (default 8x), wall-clock of
+    ``schedule.trace_program`` with ``mode="interp"`` (the per-iteration
+    Python IR walk) vs ``mode="compiled"`` (the closed-form numpy path,
+    core/affine.py), with exact-equality verification of every stream,
+  * the per-PE path report under ``trace_mode="auto"`` — the acceptance
+    bar is every PE of every kernel on the compiled path,
+  * CU construction time: generator CUs (which for load-free PEs run to
+    completion when primed) vs ``dae.make_cu``'s vectorized VecCU.
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/bench_trace.py \
+        --out BENCH_TRACE.json --scale-mult 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import dae as daelib
+from repro.core import programs
+from repro.core import schedule as schedlib
+from benchmarks.paper_table1 import scaled
+
+
+def _time(fn, reps=1):
+    best = None
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return best, out
+
+
+def _traces_equal(a, b) -> bool:
+    if set(a) != set(b):
+        return False
+    for op_id in a:
+        x, y = a[op_id], b[op_id]
+        if (
+            x.depth != y.depth
+            or x.is_store != y.is_store
+            or x.pe_id != y.pe_id
+            or not np.array_equal(x.sched, y.sched)
+            or not np.array_equal(x.addr, y.addr)
+            or not np.array_equal(x.lastiter, y.lastiter)
+            or not np.array_equal(x.seq, y.seq)
+        ):
+            return False
+    return True
+
+
+def bench(scale_mult: int = 8, reps: int = 2) -> dict:
+    scales = scaled(scale_mult)
+    out: dict = {"scale_mult": scale_mult, "scales": scales, "kernels": {}}
+    for name in programs.TABLE1:
+        prog, arrays, params = programs.get(name).make(scales[name])
+        d = daelib.decouple(prog)
+
+        t_i, tr_i = _time(
+            lambda: schedlib.trace_program(
+                prog, d, arrays, params, mode="interp"
+            ),
+            reps=reps,
+        )
+        report: dict = {}
+        t_c, tr_c = _time(
+            lambda: schedlib.trace_program(
+                prog, d, arrays, params, mode="compiled", report=report
+            ),
+            reps=reps,
+        )
+
+        # CU construction: generator (interp) vs make_cu (auto -> VecCU
+        # for load-free value chains)
+        t_cu_i, _ = _time(
+            lambda: [daelib.CU(pe, arrays, params) for pe in d.pes], reps=reps
+        )
+        t_cu_v, cus = _time(
+            lambda: [daelib.make_cu(pe, arrays, params) for pe in d.pes],
+            reps=reps,
+        )
+
+        row = {
+            "scale": scales[name],
+            "requests": int(sum(t.n_req for t in tr_i.values())),
+            "pes": len(d.pes),
+            "interp_s": round(t_i, 4),
+            "compiled_s": round(t_c, 4),
+            "speedup": round(t_i / max(t_c, 1e-9), 1),
+            "exact_equal": _traces_equal(tr_i, tr_c),
+            "paths": {
+                str(pe): rep["path"] for pe, rep in sorted(report.items())
+            },
+            "vec_cu_pes": sum(
+                1 for cu in cus if type(cu).__name__ == "VecCU"
+            ),
+            "cu_interp_s": round(t_cu_i, 4),
+            "cu_auto_s": round(t_cu_v, 4),
+        }
+        out["kernels"][name] = row
+        print(
+            f"{name:10s} reqs={row['requests']:7d} "
+            f"interp={row['interp_s']:.3f}s compiled={row['compiled_s']:.4f}s "
+            f"speedup={row['speedup']:6.1f}x exact={row['exact_equal']} "
+            f"veccu={row['vec_cu_pes']}/{row['pes']}",
+            flush=True,
+        )
+
+    rows = out["kernels"].values()
+    out["all_compiled"] = all(
+        p == "compiled" for r in rows for p in r["paths"].values()
+    )
+    out["all_exact"] = all(r["exact_equal"] for r in rows)
+    out["min_speedup"] = min(r["speedup"] for r in rows)
+    out["target_speedup"] = 10.0
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_TRACE.json")
+    ap.add_argument("--scale-mult", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=2)
+    a = ap.parse_args()
+    data = bench(scale_mult=a.scale_mult, reps=a.reps)
+    with open(a.out, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    # the acceptance bars, enforced so the CI step fails on regression
+    assert data["all_exact"], "compiled traces diverged from the interpreter"
+    assert data["all_compiled"], (
+        "a Table-1 kernel fell off the compiled path: "
+        + str({k: r["paths"] for k, r in data["kernels"].items()})
+    )
+    assert data["min_speedup"] >= data["target_speedup"], (
+        f"trace-construction speedup regressed: min {data['min_speedup']}x "
+        f"< target {data['target_speedup']}x"
+    )
+    print(
+        f"wrote {a.out}: min speedup {data['min_speedup']}x "
+        f"(target >= {data['target_speedup']}x), "
+        f"all_compiled={data['all_compiled']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

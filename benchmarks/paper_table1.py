@@ -41,7 +41,7 @@ def scaled(mult: int) -> dict[str, int]:
     return out
 
 
-def run_table(scales=None, validate=False, engine="event"):
+def run_table(scales=None, validate=False, engine="event", trace_mode="auto"):
     scales = scales or SCALES
     rows = []
     for name in programs.TABLE1:
@@ -53,6 +53,7 @@ def run_table(scales=None, validate=False, engine="event"):
             res = simulator.simulate(
                 prog, arrays, params, mode=mode,
                 validate=validate and mode != "STA", engine=engine,
+                trace_mode=trace_mode,
             )
             for k in oracle:
                 assert np.allclose(res.arrays[k], oracle[k], atol=1e-9), (
@@ -85,8 +86,10 @@ def summarize(rows):
     return out
 
 
-def main(csv=True, scale_mult=1, engine="event"):
-    rows = run_table(scales=scaled(scale_mult), engine=engine)
+def main(csv=True, scale_mult=1, engine="event", trace_mode="auto"):
+    rows = run_table(
+        scales=scaled(scale_mult), engine=engine, trace_mode=trace_mode
+    )
     if csv:
         print("kernel,PEs,STA,LSQ,FUS1,FUS2,fus2_vs_sta,fus2_vs_lsq,forwards")
         for r in rows:
@@ -110,5 +113,10 @@ if __name__ == "__main__":
     ap.add_argument("--scale-mult", type=int, default=1,
                     help="run Table 1 at N x the default scales")
     ap.add_argument("--engine", choices=("cycle", "event"), default="event")
+    ap.add_argument(
+        "--trace-mode", choices=("auto", "compiled", "interp"), default="auto",
+        help="AGU/CU front-end: compiled (vectorized), interp (reference), "
+        "or auto (compile where exact, fall back per PE)",
+    )
     a = ap.parse_args()
-    main(scale_mult=a.scale_mult, engine=a.engine)
+    main(scale_mult=a.scale_mult, engine=a.engine, trace_mode=a.trace_mode)

@@ -25,10 +25,14 @@ def _t(fn, *args, reps=3, **kw):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
-def bench_table1(emit, scale_mult=1, engine="event", scales=None):
+def bench_table1(emit, scale_mult=1, engine="event", scales=None,
+                 trace_mode="auto"):
     from benchmarks.paper_table1 import run_table, scaled, summarize
 
-    rows = run_table(scales=scales or scaled(scale_mult), engine=engine)
+    rows = run_table(
+        scales=scales or scaled(scale_mult), engine=engine,
+        trace_mode=trace_mode,
+    )
     for r in rows:
         emit(
             f"table1_{r['kernel']}",
@@ -161,6 +165,10 @@ def main(argv=None) -> None:
         "sustains >= 8x; see BENCH_ENGINE.json)",
     )
     ap.add_argument("--engine", choices=("cycle", "event"), default="event")
+    ap.add_argument(
+        "--trace-mode", choices=("auto", "compiled", "interp"),
+        default="auto", help="AGU/CU front-end path (DESIGN.md §7)",
+    )
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -173,11 +181,13 @@ def main(argv=None) -> None:
 
         smoke_scales = {k: max(v // 8, 16) for k, v in scaled(1).items()}
         smoke_scales["fft"] = 64
-        bench_table1(emit, engine=args.engine, scales=smoke_scales)
+        bench_table1(emit, engine=args.engine, scales=smoke_scales,
+                     trace_mode=args.trace_mode)
         bench_pruning(emit)
         return
 
-    bench_table1(emit, scale_mult=args.scale_mult, engine=args.engine)
+    bench_table1(emit, scale_mult=args.scale_mult, engine=args.engine,
+                 trace_mode=args.trace_mode)
     bench_pruning(emit)
     bench_forwarding(emit)
     bench_waves(emit)

@@ -26,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
+import numpy as np
+
 from repro.core import loopir as ir
 
 
@@ -233,9 +235,10 @@ class CU:
     """Compute-unit thread of one PE (the value half of the AGU/CU
     split): executes leaf iterations in order, consuming load values
     (in-order FIFO per load op) and producing store values with §6 valid
-    bits. Shared by both simulator engines — the CU is inherently
-    sequential (loop-carried locals), so it stays a generator while the
-    engines vectorize everything around it."""
+    bits. Shared by both simulator engines. A CU with protected loads
+    (or loop-carried locals) is inherently sequential, so it stays a
+    generator; *load-free value chains* take the vectorized ``VecCU``
+    path instead (``make_cu`` decides)."""
 
     def __init__(self, pe: PE, arrays, params):
         self.pe = pe
@@ -310,6 +313,82 @@ class CU:
         self.time = max(self.time, at_time)
         self.waiting_on = None
         self._advance(value)
+
+
+class VecCU:
+    """Vectorized compute unit for load-free value chains.
+
+    When a PE has no protected loads and every store value/guard is
+    vectorizable (``affine.classify_cu``), the whole outbox — store
+    values with §6 valid bits, in AGU/CU generation order — is one
+    closed-form numpy evaluation over the PE's iteration space instead
+    of a per-iteration generator walk. The interface matches ``CU``
+    exactly as the engines use it: the full ``outbox`` is ready
+    immediately (a load-free generator CU also runs to completion when
+    primed, so event timing is identical), ``done`` is True, and
+    ``feed`` can never legally be called.
+    """
+
+    def __init__(self, pe: PE, arrays, params):
+        from repro.core import affine
+
+        self.pe = pe
+        self.time = 0
+        self.done = True
+        self.waiting_on = None
+        space = affine.build_iter_space(pe, arrays, params)
+        stores: list[tuple] = []  # (stmt, depth, rank-at-depth)
+        rank_at: dict[int, int] = {}
+        for s, d in pe.stmts:
+            if isinstance(s, (ir.Load, ir.Store)):
+                r = rank_at.get(d, 0)
+                rank_at[d] = r + 1
+                if isinstance(s, ir.Store):
+                    stores.append((s, d, r))
+        seqs = affine.interleave_order(
+            space, [(s.id, d, r) for s, d, r in stores]
+        )
+        flat: list[tuple[int, str, float, bool]] = []
+        for s, d, _r in stores:
+            n = space.counts[d]
+            if not n:
+                continue
+            env = space.env[d]
+            val = np.asarray(affine.vec_eval(s.value, env, arrays, params, n))
+            if s.guard is not None:
+                valid = np.asarray(
+                    affine.vec_eval(s.guard, env, arrays, params, n)
+                ).astype(bool)
+                val = np.where(valid, val, np.zeros_like(val))
+            else:
+                valid = np.ones(n, dtype=bool)
+            seq = seqs[s.id]
+            for i in range(n):
+                flat.append((int(seq[i]), s.id, val[i].item(), bool(valid[i])))
+        flat.sort()
+        self.outbox: list[tuple[str, float, bool]] = [
+            (op_id, v, ok) for _s, op_id, v, ok in flat
+        ]
+
+    def feed(self, value: float, at_time: int):  # pragma: no cover
+        raise AssertionError("VecCU has no loads; feed() must never be called")
+
+
+def make_cu(pe: PE, arrays, params, trace_mode: str = "auto"):
+    """CU factory: vectorized value stream for load-free PEs, the
+    generator otherwise (or always, under ``trace_mode="interp"``)."""
+    if trace_mode != "interp":
+        from repro.core import affine
+
+        if affine.classify_cu(pe).compilable:
+            try:
+                return VecCU(pe, arrays, params)
+            except (affine.TraceCompileError, IndexError):
+                # residual dynamic ineligibility (non-integer ivar
+                # accumulation; a guard-protected Read evaluated
+                # speculatively out of bounds): the generator is exact
+                pass
+    return CU(pe, arrays, params)
 
 
 def _shared_depth_pe(a: PE, b: PE) -> int:

@@ -188,7 +188,10 @@ class EventEngine:
         self.deliver_dirty: set[int] = set()
         self.capped: set[str] = set()
         self.cus = {
-            pe.id: daelib.CU(pe, self.mem, params) for pe in comp.dae.pes
+            pe.id: daelib.make_cu(
+                pe, self.mem, params, getattr(comp, "trace_mode", "auto")
+            )
+            for pe in comp.dae.pes
         }
         # loads popped from pending, queued for in-order CU delivery
         self.ready_loads: dict[str, deque] = {op: deque() for op in traces}
@@ -686,7 +689,7 @@ class EventEngine:
                 progressed = True
         return progressed
 
-    def _drain_outbox(self, cu: daelib.CU):
+    def _drain_outbox(self, cu):  # daelib.CU or daelib.VecCU
         for op_id, v, valid in cu.outbox:
             self._post(self.now + self.p.cu_latency, "cu_value", (op_id, v, valid))
         cu.outbox.clear()

@@ -25,6 +25,16 @@ searches):
 sequential oracle) plus wave statistics; ``frontier_merge`` is the
 vectorized monotonic-streams primitive shared with the Pallas kernels
 and the MoE dispatch path.
+
+``trace_mode`` (default ``"auto"``) selects where the program-order
+request stream's op ids / addresses / kinds come from: the AGU trace
+compiler (``schedule.trace_program``) plus one lexsort of polyhedral
+2d+1 keys, with the oracle walk supplying the value/valid stream;
+``"interp"`` keeps the original pure-hook path. The oracle walk runs in
+full either way (store values ARE execution), so the trace-driven path
+is not a speedup — it is the conformance-bearing route that exercises
+the compiled front-end's global request ordering end to end, validated
+against the oracle by pass-3's replay assertion.
 """
 
 from __future__ import annotations
@@ -66,34 +76,114 @@ def frontier_merge(src_addr: np.ndarray, dst_addr: np.ndarray) -> np.ndarray:
     return np.searchsorted(src_addr, dst_addr, side="right")
 
 
+def _trace_stream(
+    program: ir.Program,
+    dae,
+    arrays: dict[str, np.ndarray],
+    params: dict[str, int],
+    trace_mode: str,
+) -> tuple[list[str], list[int], list[bool]]:
+    """Program-order (op id, address, is_store) stream from AGU traces.
+
+    Global program order is lexicographic on the polyhedral 2d+1 key —
+    static body positions and the §4 never-reset counters interleaved,
+    with the op's own body position last. Supplies everything except
+    values/valid bits, which only the oracle walk can produce.
+    """
+    from repro.core import schedule as schedlib
+
+    traces = schedlib.trace_program(
+        program, dae, arrays, params, mode=trace_mode
+    )
+    loop_pos, op_pos = program.static_positions()
+    op_path = {op.id: path for op, path in program.mem_ops()}
+    ops = sorted(traces)
+    if not ops:
+        return [], [], []
+    width = 2 * max(tr.depth for tr in traces.values()) + 1
+    mats = []
+    for op_id in ops:
+        tr = traces[op_id]
+        path = op_path[op_id]
+        key = np.full((tr.n_req, width), -1, dtype=np.int64)
+        for j in range(tr.depth):
+            key[:, 2 * j] = loop_pos[id(path[j])]
+            key[:, 2 * j + 1] = tr.sched[:, j]
+        key[:, 2 * tr.depth] = op_pos[op_id]
+        mats.append(key)
+    stacked = np.concatenate(mats, axis=0)
+    order = np.lexsort(stacked.T[::-1])
+    flat_op: list[str] = []
+    flat_addr = np.concatenate([traces[o].addr for o in ops])
+    flat_store: list[bool] = []
+    for op_id in ops:
+        tr = traces[op_id]
+        flat_op.extend([op_id] * tr.n_req)
+        flat_store.extend([tr.is_store] * tr.n_req)
+    return (
+        [flat_op[i] for i in order],
+        flat_addr[order].tolist(),
+        [flat_store[i] for i in order],
+    )
+
+
 def execute(
     program: ir.Program,
     arrays: dict[str, np.ndarray],
     params: Optional[dict[str, int]] = None,
+    trace_mode: str = "auto",
 ) -> ExecResult:
     """Wave-partitioned fused execution, validated against the oracle by
     construction: effects are applied in oracle order inside each wave,
     and conflicting requests never share a wave."""
     params = params or {}
 
-    # --- pass 1: program-order request trace from the oracle walk -------
-    req_op: list[str] = []
-    req_addr: list[int] = []
-    req_store: list[bool] = []
-    req_valid: list[bool] = []
-    req_value: list[Optional[float]] = []
+    from repro.core import dae as daelib
 
-    def hook(op_id, addr, is_store, valid, value):
-        req_op.append(op_id)
-        req_addr.append(addr)
-        req_store.append(is_store)
-        req_valid.append(valid)
-        req_value.append(value)
+    dae = daelib.decouple(program)
+    op_pe = dae.op_to_pe
 
-    final = ir.interpret(program, arrays, params, trace_hook=hook)
+    # --- pass 1: program-order request stream ----------------------------
+    # op/addr/kind from the trace compiler (trace_mode != "interp");
+    # value/valid always from the oracle walk — values are execution.
+    if trace_mode != "interp":
+        req_op, req_addr, req_store = _trace_stream(
+            program, dae, arrays, params, trace_mode
+        )
+        per_op_vv: dict[str, list[tuple[bool, Optional[float]]]] = {}
+
+        def hook(op_id, addr, is_store, valid, value):
+            per_op_vv.setdefault(op_id, []).append((valid, value))
+
+        ir.interpret(program, arrays, params, trace_hook=hook)
+        n_oracle = sum(len(v) for v in per_op_vv.values())
+        assert n_oracle == len(req_op), (
+            f"trace stream has {len(req_op)} requests, oracle walk "
+            f"{n_oracle} — trace compiler divergence"
+        )
+        taken: dict[str, int] = {}
+        req_valid: list[bool] = []
+        req_value: list[Optional[float]] = []
+        for op_id in req_op:
+            i = taken.get(op_id, 0)
+            taken[op_id] = i + 1
+            valid, value = per_op_vv[op_id][i]
+            req_valid.append(valid)
+            req_value.append(value)
+    else:
+        req_op, req_addr, req_store = [], [], []
+        req_valid, req_value = [], []
+
+        def hook(op_id, addr, is_store, valid, value):
+            req_op.append(op_id)
+            req_addr.append(addr)
+            req_store.append(is_store)
+            req_valid.append(valid)
+            req_value.append(value)
+
+        ir.interpret(program, arrays, params, trace_hook=hook)
 
     n = len(req_op)
-    op_pe = _op_pe_map(program)
 
     # --- pass 2: wave assignment (one program-order sweep) ---------------
     waves = np.zeros(n, dtype=np.int64)
@@ -162,10 +252,3 @@ def execute(
 
     stats = WaveStats(n_requests=n, n_waves=n_waves, sequential_depth=n)
     return ExecResult(arrays=out, stats=stats, waves=waves)
-
-
-def _op_pe_map(program: ir.Program) -> dict[str, int]:
-    from repro.core import dae as daelib
-
-    d = daelib.decouple(program)
-    return d.op_to_pe

@@ -153,6 +153,28 @@ _UN_FNS: dict[str, Callable] = {
 }
 
 
+# vectorized counterparts of _binop, used by the affine trace compiler
+# (core/affine.py); numpy's //, % match Python's semantics on ints and
+# floats, min/max become elementwise minimum/maximum. Keep the two
+# tables in sync: every op here must behave elementwise exactly like
+# _binop does on scalars.
+NP_BINOPS: dict[str, Callable] = {
+    "+": np.add,
+    "-": np.subtract,
+    "*": np.multiply,
+    "//": np.floor_divide,
+    "%": np.mod,
+    "min": np.minimum,
+    "max": np.maximum,
+    "<": np.less,
+    "<=": np.less_equal,
+    ">": np.greater,
+    ">=": np.greater_equal,
+    "==": np.equal,
+    "!=": np.not_equal,
+}
+
+
 def _binop(op: str, a, b):
     if op == "+":
         return a + b

@@ -56,6 +56,25 @@ class _Untranslatable(Exception):
     pass
 
 
+def to_cr_or_none(
+    e: ir.Expr, path: tuple[ir.Loop, ...]
+) -> Optional[crlib.CRExpr]:
+    """Translate an expression evaluated inside loop nest ``path`` to the
+    CR algebra, or None when no translation exists. Public wrapper used
+    by the affine trace compiler (core/affine.py) to tag compiled
+    addresses with their §3 classification without re-deriving the
+    depth/ivar maps."""
+    depth_of = {lp.var: i + 1 for i, lp in enumerate(path)}
+    ivars: dict[str, tuple[ir.IVar, int]] = {}
+    for i, lp in enumerate(path):
+        for iv in lp.ivars:
+            ivars[iv.name] = (iv, i + 1)
+    try:
+        return _to_cr(e, depth_of, ivars)
+    except _Untranslatable:
+        return None
+
+
 def _to_cr(
     e: ir.Expr,
     depth_of: dict[str, int],

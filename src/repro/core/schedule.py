@@ -17,6 +17,21 @@ This module runs the AGU semantics (decoupled address threads, which by
 the LoD check never depend on protected load values) ahead of time and
 materializes each op's full request stream — the software analogue of
 the AGU "running ahead" of the compute pipeline (§2.1.1).
+
+Two implementations produce bit-identical streams (DESIGN.md §7):
+
+  * ``_trace_pe`` — the reference interpreter: a per-iteration Python
+    walk of the PE's replicated loop control; wall-clock scales with
+    leaf iterations.
+  * ``compile_pe_trace`` — the affine trace compiler: when
+    ``affine.classify_pe`` accepts the PE, every array (sched counters,
+    addresses, lastIter hints, seq numbers) is built closed-form with
+    numpy over the flattened iteration space.
+
+``trace_program(mode=...)`` selects per PE: ``"auto"`` (default)
+compiles where possible and falls back to the interpreter, ``"interp"``
+forces the reference, ``"compiled"`` raises ``TraceCompileError`` naming
+the offending op when a PE is outside the compiled subset.
 """
 
 from __future__ import annotations
@@ -26,8 +41,13 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import affine
 from repro.core import dae as daelib
 from repro.core import loopir as ir
+
+TraceCompileError = affine.TraceCompileError
+
+TRACE_MODES = ("auto", "compiled", "interp")
 
 SENTINEL = np.int64(2**62)
 
@@ -123,14 +143,120 @@ def trace_program(
     dae: daelib.DAEResult,
     arrays: dict[str, np.ndarray],
     params: Optional[dict[str, int]] = None,
+    mode: str = "auto",
+    report: Optional[dict] = None,
 ) -> dict[str, OpTrace]:
-    """Generate the AGU request streams of every memory op in every PE."""
+    """Generate the AGU request streams of every memory op in every PE.
+
+    ``mode`` selects the per-PE trace path (module docstring); pass a
+    dict as ``report`` to receive, per PE id, ``{"path": "compiled" |
+    "interp", "reason": None | str, "op_affine": {...}}``.
+    """
+    assert mode in TRACE_MODES, f"unknown trace mode {mode!r}"
     params = params or {}
     out: dict[str, OpTrace] = {}
     for pe in dae.pes:
-        t = _trace_pe(pe, arrays, params)
+        path, reason, cls = "interp", None, None
+        if mode != "interp":
+            cls = affine.classify_pe(pe)
+            if cls.compilable:
+                try:
+                    t = compile_pe_trace(pe, arrays, params)
+                    path = "compiled"
+                except TraceCompileError as e:
+                    if mode == "compiled":
+                        raise
+                    reason = str(e)
+            elif mode == "compiled":
+                raise TraceCompileError(
+                    f"PE {pe.id} (leaf loop {pe.leaf.var!r}) is outside "
+                    f"the compiled subset: {'; '.join(cls.reasons)}"
+                )
+            else:
+                reason = "; ".join(cls.reasons)
+        if path == "interp":
+            t = _trace_pe(pe, arrays, params)
+        if report is not None:
+            report[pe.id] = {
+                "path": path,
+                "reason": reason,
+                "op_affine": dict(cls.op_affine) if cls is not None else {},
+            }
         out.update(t.ops)
     return out
+
+
+def _static_op_meta(
+    pe: daelib.PE,
+) -> tuple[list[tuple], dict[str, int], dict[str, bool]]:
+    """(mem stmts with depth+rank, op depth, op is_store) — statically,
+    so zero-request ops (a loop that never executes) still declare the
+    depth/kind the hazard plan derived from the same static paths."""
+    mem: list[tuple] = []  # (stmt, depth, rank-at-depth)
+    rank_at: dict[int, int] = {}
+    op_depth: dict[str, int] = {}
+    op_store: dict[str, bool] = {}
+    for s, d in pe.stmts:
+        if isinstance(s, (ir.Load, ir.Store)):
+            r = rank_at.get(d, 0)
+            rank_at[d] = r + 1
+            mem.append((s, d, r))
+            op_depth[s.id] = d
+            op_store[s.id] = isinstance(s, ir.Store)
+    return mem, op_depth, op_store
+
+
+def compile_pe_trace(
+    pe: daelib.PE, arrays: dict[str, np.ndarray], params: dict[str, int]
+) -> PETrace:
+    """Closed-form construction of the PE's request streams.
+
+    Exactly equivalent to ``_trace_pe`` for PEs inside the compiled
+    subset (``affine.classify_pe``): counters are flat invocation
+    indices + 1, lastIter flags come from the per-depth iteration
+    spaces, addresses are one vectorized evaluation per op, and the
+    per-PE ``seq`` interleave is a single lexsort of padded
+    (counter, statement-rank) keys.
+    """
+    space = affine.build_iter_space(pe, arrays, params)
+    mem, op_depth, op_store = _static_op_meta(pe)
+    seqs = affine.interleave_order(space, [(s.id, d, r) for s, d, r in mem])
+    ops: dict[str, OpTrace] = {}
+    for s, d, _r in mem:
+        n = space.counts[d]
+        if n:
+            addr = affine._as_index(
+                np.asarray(
+                    affine.vec_eval(s.addr, space.env[d], arrays, params, n)
+                )
+            ).astype(np.int64, copy=False)
+            sched = np.stack(
+                [space.anc[d][k - 1] + 1 for k in range(1, d + 1)], axis=1
+            )
+            lastiter = np.stack(
+                [
+                    space.is_last[k][space.anc[d][k - 1]]
+                    for k in range(1, d + 1)
+                ],
+                axis=1,
+            )
+        else:
+            addr = np.zeros(0, dtype=np.int64)
+            sched = np.zeros((0, d), dtype=np.int64)
+            lastiter = np.zeros((0, d), dtype=bool)
+        ops[s.id] = OpTrace(
+            op_id=s.id,
+            pe_id=pe.id,
+            depth=d,
+            is_store=op_store[s.id],
+            sched=sched,
+            addr=addr,
+            lastiter=lastiter,
+            seq=seqs[s.id],
+        )
+    return PETrace(
+        pe_id=pe.id, ops=ops, n_leaf_iters=space.counts[pe.depth]
+    )
 
 
 def _trace_pe(
@@ -142,8 +268,10 @@ def _trace_pe(
         for op_id in pe.mem_ops
     }
     seq_counter = [0]
-    op_depth: dict[str, int] = {}
-    op_store: dict[str, bool] = {}
+    # static metadata: a zero-trip loop's ops emit no requests but must
+    # still declare the depth/kind the hazard plan sees (compiled-path
+    # parity; previously these silently defaulted to pe.depth / False)
+    _, op_depth, op_store = _static_op_meta(pe)
 
     # group the PE's statements by depth
     by_depth: dict[int, list[ir.Stmt]] = {}
@@ -200,8 +328,6 @@ def _trace_pe(
             r["lastiter"].append(tuple(last_flags[1 : d + 1]))
             r["seq"].append(seq_counter[0])
             seq_counter[0] += 1
-            op_depth[s.id] = d
-            op_store[s.id] = isinstance(s, ir.Store)
         elif isinstance(s, ir.SetLocal):
             # AGU keeps only address-feeding locals; evaluating all
             # load-free locals is a superset and harmless
@@ -218,13 +344,13 @@ def _trace_pe(
     ops = {}
     for op_id in pe.mem_ops:
         r = rec[op_id]
-        d = op_depth.get(op_id, pe.depth)
+        d = op_depth[op_id]
         n = len(r["addr"])
         ops[op_id] = OpTrace(
             op_id=op_id,
             pe_id=pe.id,
             depth=d,
-            is_store=op_store.get(op_id, False),
+            is_store=op_store[op_id],
             sched=np.array(r["sched"], dtype=np.int64).reshape(n, d),
             addr=np.array(r["addr"], dtype=np.int64).reshape(n),
             lastiter=np.array(r["lastiter"], dtype=bool).reshape(n, d),

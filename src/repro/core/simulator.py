@@ -86,10 +86,20 @@ class SimResult:
 
 
 class Compiled:
-    """Everything the paper's compiler derives statically for a program."""
+    """Everything the paper's compiler derives statically for a program.
 
-    def __init__(self, program: ir.Program, forwarding: bool):
+    ``trace_mode`` selects the AGU/CU front-end path (DESIGN.md §7):
+    ``"auto"`` compiles affine PEs and falls back per PE, ``"compiled"``
+    demands the vectorized path (raising ``schedule.TraceCompileError``
+    otherwise), ``"interp"`` forces the reference interpreter. The
+    engines consult it when constructing CUs (``dae.make_cu``).
+    """
+
+    def __init__(
+        self, program: ir.Program, forwarding: bool, trace_mode: str = "auto"
+    ):
         self.program = program
+        self.trace_mode = trace_mode
         self.dae = daelib.decouple(program)
         if self.dae.fifo_edges:
             raise NotImplementedError(
@@ -279,7 +289,10 @@ class Engine:
         self.nodep_bits = dulib.nodependence_bits(comp.plan.pairs, traces)
 
         self.cus = {
-            pe.id: daelib.CU(pe, self.mem, params) for pe in comp.dae.pes
+            pe.id: daelib.make_cu(
+                pe, self.mem, params, getattr(comp, "trace_mode", "auto")
+            )
+            for pe in comp.dae.pes
         }
         self.store_values: dict[str, list[tuple[int, float, bool]]] = {}
         self.ready_loads: dict[str, list[dulib.PendingEntry]] = {}
@@ -637,6 +650,7 @@ def simulate(
     sim: Optional[SimParams] = None,
     validate: bool = False,
     engine: str = "event",
+    trace_mode: str = "auto",
 ) -> SimResult:
     """Simulate ``program`` under one of the four evaluated systems.
 
@@ -653,13 +667,21 @@ def simulate(
         debugging.
 
     STA is evaluated analytically and ignores ``engine``.
+
+    ``trace_mode`` selects the AGU/CU front-end (``"auto"`` |
+    ``"compiled"`` | ``"interp"``, see ``schedule.trace_program``); both
+    engines consume the same streams, so results are identical across
+    trace modes — ``"compiled"`` just builds them closed-form.
     """
     assert mode in ("STA", "LSQ", "FUS1", "FUS2"), f"unknown mode {mode!r}"
     assert engine in ("cycle", "event"), f"unknown engine {engine!r}"
+    assert trace_mode in schedlib.TRACE_MODES, f"unknown trace mode {trace_mode!r}"
     params = params or {}
     p = sim or SimParams()
-    comp = Compiled(program, forwarding=(mode == "FUS2"))
-    traces = schedlib.trace_program(program, comp.dae, arrays, params)
+    comp = Compiled(program, forwarding=(mode == "FUS2"), trace_mode=trace_mode)
+    traces = schedlib.trace_program(
+        program, comp.dae, arrays, params, mode=trace_mode
+    )
     if mode == "STA":
         return _simulate_sta(comp, traces, arrays, params, p)
 

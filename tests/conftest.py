@@ -1,0 +1,7 @@
+"""Test-suite conftest: make sibling helper modules (loopir_strategies)
+importable from any test file regardless of pytest's rootdir/importmode."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,254 @@
+"""Shared random-program generators: LoopIR programs inside the
+affine/compilable subset (core/affine.py).
+
+Used by tests/test_trace_compile.py (the differential fuzz suite pinning
+the compiled AGU/CU front-end to the interpreter bit for bit) and by
+tests/test_property.py (schedule-invariant properties). The generator
+deliberately covers the edge cases the trace compiler has to get right:
+
+  * mixed-depth forests (parent-body ops before inner loops — the
+    Fig. 3 'pending' assignment; statements *after* an inner loop are
+    outside the decoupling contract and are not generated),
+  * zero-trip loops (constant zero AND outer-var-dependent trips that
+    go negative — ``range`` semantics clamp to empty),
+  * params-dependent and Read-gather (CSR-style ragged) trip counts,
+  * additive ivars with iteration-varying steps, multiplicative ivars
+    with invariant steps (FFT's ``stride *= 2``),
+  * unpredictable loops (lastIter hint degrades to 0),
+  * data-dependent addresses through (nested) Read gathers.
+
+The cores are plain ``numpy.random.Generator`` functions so the
+differential suite runs even without hypothesis; when hypothesis is
+available they are wrapped as strategies (``affine_programs()``,
+``loadfree_cu_programs()``) drawing the seed, and two profiles are
+registered: the default (tier-1 budget, untouched) and ``nightly``
+(bigger example budget for the scheduled CI fuzz job, selected with
+``HYPOTHESIS_PROFILE=nightly`` and typically ``--hypothesis-seed=random``).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import loopir as ir
+
+try:  # hypothesis is an optional test dependency (pip install .[test])
+    from hypothesis import settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+# read-only arrays every generated program may gather from
+_N_IDX = 24
+
+
+def _choice(rng, options):
+    return options[int(rng.integers(0, len(options)))]
+
+
+def _affine_term(rng, vars_visible: list[str]) -> ir.Expr:
+    """A small affine term over the visible loop vars/ivars."""
+    if not vars_visible:
+        return ir.Const(int(rng.integers(0, 7)))
+    v = ir.Var(_choice(rng, vars_visible))
+    c = int(rng.integers(0, 5))
+    k = int(rng.integers(1, 4))
+    return v * k + c
+
+
+def _addr_expr(rng, vars_visible: list[str]) -> ir.Expr:
+    """Address/index expression: affine combo, optionally through a Read
+    gather (bounded by %) or a nested gather-of-gather."""
+    kind = _choice(rng, ["affine", "read", "nested", "param"])
+    base = _affine_term(rng, vars_visible)
+    if kind == "affine":
+        return base + _affine_term(rng, vars_visible)
+    if kind == "param":
+        return base + ir.Param("P", 0, 8)
+    idx = ir.Bin("%", base, ir.Const(_N_IDX))
+    inner = ir.Read("idx_a", idx)
+    if kind == "read":
+        return inner + _affine_term(rng, vars_visible)
+    return ir.Read("idx_b", ir.Bin("%", inner + base, ir.Const(_N_IDX)))
+
+
+def _trip_expr(rng, outer_vars: list[str]) -> ir.Expr:
+    kind = _choice(rng, ["const", "zero", "param", "outer", "read", "neg"])
+    if kind == "const":
+        return ir.Const(int(rng.integers(1, 5)))
+    if kind == "zero":
+        return ir.Const(0)
+    if kind == "param":
+        return ir.Param("P", 0, 8)
+    if not outer_vars:  # outer/read/neg need an enclosing var
+        return ir.Const(int(rng.integers(0, 4)))
+    v = ir.Var(_choice(rng, outer_vars))
+    if kind == "outer":
+        return v + int(rng.integers(0, 3))
+    if kind == "neg":
+        # goes negative for later iterations -> range() clamps to empty
+        return ir.Bin("-", ir.Const(int(rng.integers(0, 4))), v)
+    return ir.Read("trips", ir.Bin("%", v, ir.Const(_N_IDX)))
+
+
+def _base_arrays(rng) -> dict[str, np.ndarray]:
+    return {
+        "idx_a": rng.integers(0, 40, size=_N_IDX).astype(np.int64),
+        "idx_b": rng.integers(0, 40, size=_N_IDX).astype(np.int64),
+        "trips": rng.integers(0, 4, size=_N_IDX).astype(np.int64),
+        "vals": rng.standard_normal(_N_IDX),
+        "A": np.zeros(1, dtype=np.float64),  # never dereferenced in tracing
+    }
+
+
+def random_affine_program(rng, max_depth: int = 3):
+    """A random loop forest inside the compiled subset, plus arrays and
+    params. Every program decouples (no cross-PE locals, no LoadVals in
+    addresses) and must compile exactly."""
+    counter = {"loop": 0, "op": 0}
+    arrays = _base_arrays(rng)
+    params = {"P": int(rng.integers(0, 6))}
+
+    def make_op(vars_visible):
+        counter["op"] += 1
+        oid = f"op{counter['op']}"
+        addr = _addr_expr(rng, vars_visible)
+        if rng.integers(0, 2):
+            return ir.Store(oid, "A", addr, ir.Const(1.0))
+        return ir.Load(oid, "A", addr)
+
+    def make_ivars(var):
+        ivars = []
+        if rng.integers(0, 4) == 0:
+            name = f"iv{counter['loop']}"
+            if rng.integers(0, 2):
+                # '+' ivar; step may vary with this loop's own var
+                step = (
+                    ir.Var(var) + int(rng.integers(0, 3))
+                    if rng.integers(0, 2)
+                    else ir.Const(int(rng.integers(0, 4)))
+                )
+                ivars.append(
+                    ir.IVar(name, ir.Const(int(rng.integers(0, 4))), "+", step)
+                )
+            else:
+                # '*' ivar: loop-invariant integer step (FFT-style)
+                ivars.append(
+                    ir.IVar(
+                        name,
+                        ir.Const(int(rng.integers(1, 3))),
+                        "*",
+                        ir.Const(int(rng.integers(2, 4))),
+                    )
+                )
+        return ivars
+
+    def make_loop(depth, outer_vars):
+        counter["loop"] += 1
+        var = f"v{counter['loop']}"
+        ivars = make_ivars(var)
+        visible = outer_vars + [var] + [iv.name for iv in ivars]
+        body = []
+        # ops at this depth, before any inner loop (parent-body 'pending')
+        for _ in range(int(rng.integers(0, 3))):
+            body.append(make_op(visible))
+        if depth < max_depth and rng.integers(0, 3) > 0:
+            # note: only *leading* parent-body ops — statements after an
+            # inner loop are outside the decoupling contract (Fig. 3
+            # replicates only the control of the leaf's own ancestors)
+            for _ in range(int(rng.integers(1, 3))):
+                body.append(make_loop(depth + 1, visible))
+        if not any(isinstance(s, (ir.Load, ir.Store, ir.Loop)) for s in body):
+            body.append(make_op(visible))
+        return ir.Loop(
+            var,
+            _trip_expr(rng, outer_vars),
+            tuple(body),
+            ivars=tuple(ivars),
+            predictable=bool(rng.integers(0, 2)),
+        )
+
+    loops = tuple(
+        make_loop(1, []) for _ in range(int(rng.integers(1, 3)))
+    )
+    prog = ir.Program("fuzz", loops=loops, params=("P",))
+    return prog, arrays, params
+
+
+def random_loadfree_cu_program(rng, max_depth: int = 2):
+    """Random programs whose PEs are all load-free value chains: stores
+    with vectorizable values and (sometimes) §6 guards — the dae.VecCU
+    subset, for the CU value-stream differential."""
+    counter = {"loop": 0, "op": 0}
+    arrays = _base_arrays(rng)
+    params = {"P": int(rng.integers(0, 6))}
+
+    def value_expr(vars_visible):
+        kind = _choice(rng, ["const", "affine", "read", "unop"])
+        if kind == "const":
+            return ir.Const(float(rng.integers(-3, 4)))
+        base = _affine_term(rng, vars_visible)
+        if kind == "affine":
+            return base * 2 + 1
+        rd = ir.Read("vals", ir.Bin("%", base, ir.Const(_N_IDX)))
+        if kind == "read":
+            return rd + ir.Const(0.5)
+        return ir.Un(_choice(rng, ["tanh", "relu", "abs", "sign"]), rd)
+
+    def make_store(vars_visible):
+        counter["op"] += 1
+        oid = f"st{counter['op']}"
+        guard = None
+        if rng.integers(0, 2):
+            g = ir.Read(
+                "trips",
+                ir.Bin("%", _affine_term(rng, vars_visible), ir.Const(_N_IDX)),
+            )
+            guard = ir.Bin(">", g, ir.Const(int(rng.integers(0, 4))))
+        return ir.Store(
+            oid, "A", _addr_expr(rng, vars_visible),
+            value_expr(vars_visible), guard=guard,
+        )
+
+    def make_loop(depth, outer_vars):
+        counter["loop"] += 1
+        var = f"w{counter['loop']}"
+        visible = outer_vars + [var]
+        body = [make_store(visible) for _ in range(int(rng.integers(1, 3)))]
+        if depth < max_depth and rng.integers(0, 2):
+            body.append(make_loop(depth + 1, visible))
+        return ir.Loop(
+            var,
+            _trip_expr(rng, outer_vars),
+            tuple(body),
+            predictable=bool(rng.integers(0, 2)),
+        )
+
+    loops = tuple(make_loop(1, []) for _ in range(int(rng.integers(1, 3))))
+    prog = ir.Program("cufuzz", loops=loops, params=("P",))
+    return prog, arrays, params
+
+
+if HAVE_HYPOTHESIS:
+    # Example budgets come from profiles, NOT per-test @settings — a
+    # pinned max_examples would silently override the nightly profile.
+    settings.register_profile("tier1", max_examples=60, deadline=None)
+    settings.register_profile("nightly", max_examples=250, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "tier1"))
+
+    @st.composite
+    def affine_programs(draw, max_depth: int = 3):
+        seed = draw(st.integers(0, 2**31))
+        return random_affine_program(
+            np.random.default_rng(seed), max_depth=max_depth
+        )
+
+    @st.composite
+    def loadfree_cu_programs(draw, max_depth: int = 2):
+        seed = draw(st.integers(0, 2**31))
+        return random_loadfree_cu_program(
+            np.random.default_rng(seed), max_depth=max_depth
+        )

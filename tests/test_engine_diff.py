@@ -71,6 +71,34 @@ def test_engines_conform_on_table1(name, mode):
         assert ev.forwards == cy.forwards, (name, mode)
 
 
+@pytest.mark.parametrize("name", programs.TABLE1)
+@pytest.mark.parametrize("mode", MODES)
+def test_trace_modes_agree_on_table1(name, mode):
+    """The compiled AGU/CU front-end feeds the engines streams that are
+    *exactly* the interpreter's, so simulation results are identical —
+    not merely within tolerance: same cycles, same traffic, same final
+    arrays (and oracle-exact)."""
+    prog, arrays, params = programs.get(name).make(_scale(name))
+    oracle = ir.interpret(prog, arrays, params)
+    ri = simulator.simulate(
+        prog, arrays, params, mode=mode, engine="event", trace_mode="interp"
+    )
+    rc = simulator.simulate(
+        prog, arrays, params, mode=mode, engine="event",
+        validate=(mode != "STA"), trace_mode="compiled",
+    )
+    assert rc.cycles == ri.cycles, (name, mode, ri.cycles, rc.cycles)
+    assert rc.dram_requests == ri.dram_requests, (name, mode)
+    if mode != "STA":
+        assert rc.forwards == ri.forwards, (name, mode)
+    for k in oracle:
+        np.testing.assert_array_equal(
+            rc.arrays[k], ri.arrays[k],
+            err_msg=f"{name}/{mode}: trace modes diverged on array {k}",
+        )
+        np.testing.assert_allclose(rc.arrays[k], oracle[k], atol=1e-12)
+
+
 # ---------------------------------------------------------------------------
 # edge cases
 # ---------------------------------------------------------------------------

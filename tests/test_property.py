@@ -181,3 +181,37 @@ def test_schedule_counters_monotone(pa):
         for depth in range(t.depth):
             col = t.sched[:, depth]
             assert (np.diff(col) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# compiled-trace invariants on the shared affine strategy
+# (tests/loopir_strategies.py; the exact compiled-vs-interp differential
+# lives in tests/test_trace_compile.py)
+# ---------------------------------------------------------------------------
+
+
+from loopir_strategies import affine_programs  # noqa: E402
+
+
+# budget governed by the loopir_strategies profile (tier1 / nightly)
+@given(affine_programs())
+def test_compiled_schedule_invariants(pa):
+    """Compiled traces satisfy the §4 schedule contract on random affine
+    programs: per-depth counters never decrease within a stream, seq is
+    strictly increasing per op, and every PE's seq numbers form one
+    contiguous 0..n-1 interleave."""
+    from repro.core import dae as daelib, schedule as schedlib
+
+    prog, arrays, params = pa
+    d = daelib.decouple(prog)
+    traces = schedlib.trace_program(prog, d, arrays, params, mode="compiled")
+    by_pe: dict[int, list] = {}
+    for t in traces.values():
+        for depth in range(t.depth):
+            assert (np.diff(t.sched[:, depth]) >= 0).all()
+        if t.n_req:
+            assert (np.diff(t.seq) > 0).all()
+        by_pe.setdefault(t.pe_id, []).append(t)
+    for ts in by_pe.values():
+        seqs = np.sort(np.concatenate([t.seq for t in ts]))
+        np.testing.assert_array_equal(seqs, np.arange(len(seqs)))
