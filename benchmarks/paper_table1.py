@@ -69,9 +69,8 @@ def run_table(scales=None, validate=False, engine="event", trace_mode="auto"):
     return rows
 
 
-def harmonic_mean(xs):
-    xs = [x for x in xs if x > 0]
-    return len(xs) / sum(1.0 / x for x in xs)
+# single implementation lives in the importable library layer
+from repro.launch.analysis import harmonic_mean  # noqa: E402
 
 
 def summarize(rows):

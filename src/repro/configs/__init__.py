@@ -1,0 +1,2 @@
+"""Model-architecture configs (one module per assigned family) and the
+registry in ``repro.configs.base``."""

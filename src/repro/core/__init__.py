@@ -1,3 +1,4 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's core: LoopIR, the DAE/monotonicity/hazard compiler
+front-end, AGU trace compilation, and the cycle-level simulation of the
+four evaluated systems (STA/LSQ/FUS1/FUS2). Start at
+``repro.core.simulator.simulate`` and DESIGN.md §1."""

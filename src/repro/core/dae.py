@@ -391,6 +391,98 @@ def make_cu(pe: PE, arrays, params, trace_mode: str = "auto"):
     return CU(pe, arrays, params)
 
 
+# ---------------------------------------------------------------------------
+# CU script recording / replay (the DSE batch runner's shared dataflow)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CUScript:
+    """The complete, timing-independent behaviour of one PE's CU.
+
+    A CU is pure dataflow: it consumes protected load values in a fixed
+    order (``feeds``) and emits outbox items — ``(store op id, value,
+    §6 valid bit)`` — at fixed points of that consumption sequence.
+    *When* each feed arrives is timing; *what* happens is not. A script
+    records the what once (per program/arrays/params), so a design-space
+    sweep can replay the CU in O(1) Python per feed for every timing
+    configuration instead of re-walking the IR per iteration
+    (``ReplayCU``; see DESIGN.md §9).
+
+    ``offsets[k]`` is the number of outbox items emitted after ``k``
+    feeds (``offsets[0]`` = items emitted when the CU is primed, before
+    any load value arrives; load-free PEs emit everything there).
+    """
+
+    pe_id: int
+    items: list  # [(op_id, value, valid)] in emission order
+    feeds: list  # load op ids, in consumption order
+    offsets: list  # len(feeds)+1 cumulative item counts
+
+
+def record_cu_script(
+    pe: PE, arrays, params, oracle_loads: dict, trace_mode: str = "auto"
+) -> CUScript:
+    """Run one PE's CU to completion against the oracle's load-value
+    streams and record its script.
+
+    ``oracle_loads`` maps load op id -> the op's in-order value stream
+    (``loopir.interpret``'s trace hook produces exactly this). Sound
+    because the engines' validated delivery contract guarantees every
+    load receives its oracle value regardless of timing parameters, so
+    the recorded emission sequence is what any simulation of this
+    (program, arrays, params) would produce.
+    """
+    cu = make_cu(pe, arrays, params, trace_mode)
+    feeds: list[str] = []
+    offsets: list[int] = [len(cu.outbox)]
+    cursor: dict[str, int] = {}
+    while cu.waiting_on is not None:
+        op_id = cu.waiting_on
+        i = cursor.get(op_id, 0)
+        cursor[op_id] = i + 1
+        feeds.append(op_id)
+        cu.feed(float(oracle_loads[op_id][i]), 0)
+        offsets.append(len(cu.outbox))
+    assert cu.done, f"PE {pe.id}: CU neither waiting nor done"
+    return CUScript(
+        pe_id=pe.id, items=list(cu.outbox), feeds=feeds, offsets=offsets
+    )
+
+
+class ReplayCU:
+    """Replay a recorded ``CUScript`` with the exact engine-facing
+    behaviour of the CU it was recorded from: same ``outbox`` items in
+    the same feed-relative positions, same ``waiting_on`` sequence, same
+    ``done`` transitions — at O(1) Python cost per feed. Engines drain
+    ``outbox`` after priming and after every ``feed``, so emission
+    timing (and therefore simulated cycles) is bit-identical to running
+    the generator/vectorized CU in place."""
+
+    __slots__ = ("script", "k", "outbox", "done", "waiting_on", "time")
+
+    def __init__(self, script: CUScript):
+        self.script = script
+        self.k = 0
+        self.outbox = list(script.items[: script.offsets[0]])
+        n = len(script.feeds)
+        self.done = n == 0
+        self.waiting_on = script.feeds[0] if n else None
+        self.time = 0
+
+    def feed(self, value: float, at_time: int):
+        assert self.waiting_on is not None
+        self.time = max(self.time, at_time)
+        s = self.script
+        k = self.k = self.k + 1
+        self.outbox.extend(s.items[s.offsets[k - 1] : s.offsets[k]])
+        if k < len(s.feeds):
+            self.waiting_on = s.feeds[k]
+        else:
+            self.waiting_on = None
+            self.done = True
+
+
 def _shared_depth_pe(a: PE, b: PE) -> int:
     k = 0
     for la, lb in zip(a.path, b.path):

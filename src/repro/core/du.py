@@ -229,8 +229,18 @@ def check_pair_batch(
       * ``next_state`` = (next_sched_k (m,), no_pending_ack (m,)) — the
         second Program-Order line, likewise time-reconstructed.
 
+    **Config batching.** All stateful inputs additionally accept a
+    leading *config* axis: ``frontier`` arrays of shape ``(C, m, d)`` /
+    ``(C, m)``, ``next_state`` of ``(C, m)``, ``nodep_bits`` of
+    ``(C, m)`` — one row per sweep configuration evaluating the same
+    ``m`` dst requests against per-config DU states. The result then has
+    shape ``(C, m)``. This is how the DSE sweep runner
+    (``repro.dse.runner``) evaluates one pair across a whole group of
+    design points in a single call instead of C scalar-slice calls.
+
     Term-for-term mirror of ``check_pair``; tests assert elementwise
-    equivalence against the scalar version.
+    equivalence against the scalar version (and config-stacked calls
+    against per-config calls).
     """
     m = len(req_addr)
     k = pair.shared_depth
@@ -243,7 +253,7 @@ def check_pair_batch(
 
     def f_sched_at(depth: int):
         if frontier is not None:
-            return f_sched_rows[:, depth - 1]
+            return f_sched_rows[..., depth - 1]
         return f_sched[depth - 1]
 
     # --- Program Order Safety Check (§5.2) ---
@@ -267,7 +277,7 @@ def check_pair_batch(
     if frontier is not None:
         reset = True
         for j in pair.lastiter_depths:
-            reset = reset & f_last_rows[:, j - 1]
+            reset = reset & f_last_rows[..., j - 1]
     else:
         reset = all(f_lastiter[j - 1] for j in pair.lastiter_depths)
     if pair.l_depth is not None:

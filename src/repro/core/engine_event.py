@@ -161,7 +161,7 @@ class EventEngine:
     """LSQ / FUS1 / FUS2 execution with vectorized waves (module doc)."""
 
     def __init__(self, comp, traces, arrays, params, mode, p,
-                 oracle_loads: Optional[dict] = None):
+                 oracle_loads: Optional[dict] = None, shared=None):
         self.comp = comp
         self.traces = traces
         self.mode = mode
@@ -174,7 +174,10 @@ class EventEngine:
         self.params = params
         self.ports = {op: EvPort(tr) for op, tr in traces.items()}
         self.pairs_by_dst = comp.plan.by_dst()
-        self.nodep_bits = dulib.nodependence_bits(comp.plan.pairs, traces)
+        if shared is not None and shared.nodep_bits is not None:
+            self.nodep_bits = shared.nodep_bits
+        else:
+            self.nodep_bits = dulib.nodependence_bits(comp.plan.pairs, traces)
         # reverse dependency map: when src's frontier moves (issue/pop),
         # these dst ports must be re-evaluated
         self.dsts_of: dict[str, list[str]] = {}
@@ -187,21 +190,27 @@ class EventEngine:
         self.ack_dirty: set[str] = set()
         self.deliver_dirty: set[int] = set()
         self.capped: set[str] = set()
-        self.cus = {
-            pe.id: daelib.make_cu(
-                pe, self.mem, params, getattr(comp, "trace_mode", "auto")
-            )
-            for pe in comp.dae.pes
-        }
+        if shared is not None and shared.cu_factory is not None:
+            self.cus = {pe.id: shared.cu_factory(pe) for pe in comp.dae.pes}
+        else:
+            self.cus = {
+                pe.id: daelib.make_cu(
+                    pe, self.mem, params, getattr(comp, "trace_mode", "auto")
+                )
+                for pe in comp.dae.pes
+            }
         # loads popped from pending, queued for in-order CU delivery
         self.ready_loads: dict[str, deque] = {op: deque() for op in traces}
 
         if self.sequential:
-            fuse = {pe.id: pe.id for pe in comp.dae.pes}  # LSQ: no fusion
-            ranks, counts = schedlib.instance_rank_table(
-                traces, comp.dae, comp.loop_pos, comp.op_pos, fuse,
-                comp.op_path,
-            )
+            if shared is not None and shared.rank_table is not None:
+                ranks, counts = shared.rank_table
+            else:
+                fuse = {pe.id: pe.id for pe in comp.dae.pes}  # LSQ: no fusion
+                ranks, counts = schedlib.instance_rank_table(
+                    traces, comp.dae, comp.loop_pos, comp.op_pos, fuse,
+                    comp.op_path,
+                )
             self.inst_rank = ranks
             self.inst_outstanding = counts.copy()
             self.inst_window = 0

@@ -324,6 +324,48 @@ class Program:
                 return op, path
         raise KeyError(op_id)
 
+    def fingerprint(self) -> str:
+        """Stable structural hash of the program (hex sha256).
+
+        Canonical recursive encoding of the IR forest — statement kinds,
+        op ids, expression trees, trips, ivars, guards, hints — so two
+        structurally identical programs hash equal across processes and
+        sessions (``repr``/``hash`` of nested dataclasses are not stable
+        enough to key an on-disk cache). Array *contents* and parameter
+        *values* are deliberately excluded: the DSE result cache
+        (``repro.dse.cache``) hashes those separately.
+        """
+        import hashlib
+
+        h = hashlib.sha256()
+
+        def put(x):
+            h.update(repr(x).encode())
+            h.update(b"\x00")
+
+        def enc(node):
+            if node is None or isinstance(node, (str, int, float, bool)):
+                put(node)
+            elif isinstance(node, frozenset):
+                put("{")
+                for x in sorted(node):
+                    enc(x)
+                put("}")
+            elif isinstance(node, (tuple, list)):
+                put("(")
+                for x in node:
+                    enc(x)
+                put(")")
+            elif dataclasses.is_dataclass(node):
+                put(type(node).__name__)
+                for f in dataclasses.fields(node):
+                    enc(getattr(node, f.name))
+            else:  # pragma: no cover
+                raise TypeError(f"cannot fingerprint {node!r}")
+
+        enc(self)
+        return h.hexdigest()
+
     def static_positions(self) -> tuple[dict[int, int], dict[str, int]]:
         """(loop object id -> index in parent body, op id -> index in its
         body). Together with per-depth counters these give a global

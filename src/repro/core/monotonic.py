@@ -201,5 +201,14 @@ def analyze_op(
 
 
 def analyze_program(program: ir.Program) -> dict[str, AddressInfo]:
-    """AddressInfo for every memory op in the program."""
+    """Address monotonicity analysis of every memory op (paper §3).
+
+    Maps op id -> ``AddressInfo``: whether the address is affine /
+    innermost-monotonic (the requirement for the DU's frontier
+    comparison) and which outer loop depths may reset it (driving the
+    lastIter instrumentation and No-Address-Reset check). Data-dependent
+    addresses honour user ``MonotonicHint`` assertions (§3.3), else are
+    conservatively non-monotonic at every depth. This is the first
+    stage of ``simulator.Compiled``; the hazard plan
+    (``hazards.build_plan``) consumes the result."""
     return {op.id: analyze_op(op, path) for op, path in program.mem_ops()}

@@ -222,6 +222,11 @@ def compile_pe_trace(
     mem, op_depth, op_store = _static_op_meta(pe)
     seqs = affine.interleave_order(space, [(s.id, d, r) for s, d, r in mem])
     ops: dict[str, OpTrace] = {}
+    # emit in pe.mem_ops order, matching _trace_pe: the trace dict's key
+    # order is the engines' deterministic port-scan order, so the paths
+    # must agree on it or same-cycle ties resolve differently (observed
+    # as a 2-cycle drift on matpower at 8x scale before this ordering)
+    mem.sort(key=lambda t: pe.mem_ops.index(t[0].id))
     for s, d, _r in mem:
         n = space.counts[d]
         if n:

@@ -72,12 +72,50 @@ class SimParams:
 
 @dataclasses.dataclass
 class SimResult:
+    """Outcome of one simulated (program, mode, timing) point.
+
+    ``cycles`` is the simulated completion time under the DU timing
+    model; ``arrays`` the final protected-memory state (always equal to
+    the sequential oracle — that equality is what validates the hazard
+    logic); ``dram_bursts``/``dram_requests`` the DRAM traffic and
+    ``forwards`` the §5.5 store-to-load forwarding hit count (FUS2).
+    """
+
     cycles: int
     arrays: dict[str, np.ndarray]
     mode: str
     dram_bursts: int = 0
     dram_requests: int = 0
     forwards: int = 0
+
+
+@dataclasses.dataclass
+class SharedArtifacts:
+    """Precomputed per-(program, arrays, params) state shared across many
+    simulation points by the DSE batch runner (``repro.dse``, DESIGN.md
+    §9). Every field is a pure function of the program/data — never of
+    timing parameters — so injecting it cannot change any result; each
+    field falls back to the engine's own computation when ``None``.
+
+      * ``nodep_bits`` — §5.6 NoDependence bit streams keyed
+        ``(dst, src)``; may be a superset of the pairs any one plan
+        keeps (engines look up by pair id).
+      * ``rank_table`` — ``(ranks, counts)`` from
+        ``schedule.instance_rank_table`` for the LSQ instance window
+        (engines copy ``counts`` before mutating).
+      * ``cu_factory`` — ``pe -> CU-like``; the DSE runner passes
+        recorded-script replay CUs (``dae.ReplayCU``).
+      * ``sta_instances`` — ``(order, info)`` from ``_instances`` for
+        the STA analytical model.
+      * ``final_arrays`` — the sequential oracle's final state; STA
+        results copy it instead of re-interpreting.
+    """
+
+    nodep_bits: Optional[dict] = None
+    rank_table: Optional[tuple] = None
+    cu_factory: Optional[object] = None
+    sta_instances: Optional[tuple] = None
+    final_arrays: Optional[dict] = None
 
 
 # ---------------------------------------------------------------------------
@@ -209,9 +247,13 @@ def _simulate_sta(
     arrays: dict[str, np.ndarray],
     params: dict[str, int],
     p: SimParams,
+    shared: Optional[SharedArtifacts] = None,
 ) -> SimResult:
-    fuse = _fusion_groups_sta(comp)
-    order, info = _instances(comp, traces, fuse)
+    if shared is not None and shared.sta_instances is not None:
+        order, info = shared.sta_instances
+    else:
+        fuse = _fusion_groups_sta(comp)
+        order, info = _instances(comp, traces, fuse)
 
     total = 0
     bursts = 0
@@ -231,7 +273,12 @@ def _simulate_sta(
         bursts += n_bursts
         requests += d["requests"]
 
-    final = ir.interpret(comp.program, arrays, params)
+    if shared is not None and shared.final_arrays is not None:
+        final = {
+            k: np.array(v, copy=True) for k, v in shared.final_arrays.items()
+        }
+    else:
+        final = ir.interpret(comp.program, arrays, params)
     return SimResult(
         cycles=total,
         arrays=final,
@@ -271,6 +318,7 @@ class Engine:
         params: dict[str, int],
         mode: str,
         p: SimParams,
+        shared: Optional[SharedArtifacts] = None,
     ):
         self.comp = comp
         self.traces = traces
@@ -286,23 +334,32 @@ class Engine:
         self.pairs_by_dst = comp.plan.by_dst()
 
         # §5.6 NoDependence bits
-        self.nodep_bits = dulib.nodependence_bits(comp.plan.pairs, traces)
+        if shared is not None and shared.nodep_bits is not None:
+            self.nodep_bits = shared.nodep_bits
+        else:
+            self.nodep_bits = dulib.nodependence_bits(comp.plan.pairs, traces)
 
-        self.cus = {
-            pe.id: daelib.make_cu(
-                pe, self.mem, params, getattr(comp, "trace_mode", "auto")
-            )
-            for pe in comp.dae.pes
-        }
+        if shared is not None and shared.cu_factory is not None:
+            self.cus = {pe.id: shared.cu_factory(pe) for pe in comp.dae.pes}
+        else:
+            self.cus = {
+                pe.id: daelib.make_cu(
+                    pe, self.mem, params, getattr(comp, "trace_mode", "auto")
+                )
+                for pe in comp.dae.pes
+            }
         self.store_values: dict[str, list[tuple[int, float, bool]]] = {}
         self.ready_loads: dict[str, list[dulib.PendingEntry]] = {}
 
         if self.sequential:
-            fuse = {pe.id: pe.id for pe in comp.dae.pes}  # LSQ: no fusion
-            ranks, counts = schedlib.instance_rank_table(
-                traces, comp.dae, comp.loop_pos, comp.op_pos, fuse,
-                comp.op_path,
-            )
+            if shared is not None and shared.rank_table is not None:
+                ranks, counts = shared.rank_table
+            else:
+                fuse = {pe.id: pe.id for pe in comp.dae.pes}  # LSQ: no fusion
+                ranks, counts = schedlib.instance_rank_table(
+                    traces, comp.dae, comp.loop_pos, comp.op_pos, fuse,
+                    comp.op_path,
+                )
             self.inst_outstanding = counts.tolist()
             self.req_inst: dict[tuple[str, int], int] = {}
             for op_id, r in ranks.items():
@@ -682,11 +739,9 @@ def simulate(
     traces = schedlib.trace_program(
         program, comp.dae, arrays, params, mode=trace_mode
     )
-    if mode == "STA":
-        return _simulate_sta(comp, traces, arrays, params, p)
 
     oracle_loads: Optional[dict[str, list[float]]] = None
-    if validate:
+    if validate and mode != "STA":
         oracle_loads = {}
 
         def hook(op_id, addr, is_store, valid, value):
@@ -695,13 +750,50 @@ def simulate(
 
         ir.interpret(program, arrays, params, trace_hook=hook)
 
+    return simulate_traced(
+        comp, traces, arrays, params, mode=mode, sim=p, engine=engine,
+        oracle_loads=oracle_loads,
+    )
+
+
+def simulate_traced(
+    comp: Compiled,
+    traces: dict[str, schedlib.OpTrace],
+    arrays: dict[str, np.ndarray],
+    params: dict[str, int],
+    mode: str = "FUS2",
+    sim: Optional[SimParams] = None,
+    engine: str = "event",
+    oracle_loads: Optional[dict] = None,
+    shared: Optional[SharedArtifacts] = None,
+) -> SimResult:
+    """Simulate from an already-compiled front-end.
+
+    The lower half of ``simulate()``: takes the ``Compiled`` analysis
+    and the materialized AGU request streams instead of rebuilding them,
+    plus an optional ``SharedArtifacts`` bundle. This is the entry point
+    the DSE batch runner (``repro.dse``) uses to run many timing/mode
+    points against one compiled program — results are bit-identical to
+    ``simulate()`` with the same settings, because every shared artifact
+    is timing-independent (DESIGN.md §9).
+
+    ``oracle_loads`` (op id -> in-order load value list/array) enables
+    per-request validation against the sequential oracle, as
+    ``simulate(validate=True)`` does.
+    """
+    p = sim or SimParams()
+    if mode == "STA":
+        return _simulate_sta(comp, traces, arrays, params, p, shared=shared)
+
     if engine == "event":
         from repro.core import engine_event
 
         ev = engine_event.EventEngine(
-            comp, traces, arrays, params, mode, p, oracle_loads=oracle_loads
+            comp, traces, arrays, params, mode, p,
+            oracle_loads=oracle_loads, shared=shared,
         )
         return ev.run()
-    eng = Engine(comp, traces, arrays, params, mode, p)
-    eng.oracle_loads = oracle_loads
+    eng = Engine(comp, traces, arrays, params, mode, p, shared=shared)
+    if oracle_loads is not None:
+        eng.oracle_loads = {k: list(v) for k, v in oracle_loads.items()}
     return eng.run()

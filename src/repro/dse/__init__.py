@@ -1,0 +1,51 @@
+"""Batched design-space exploration over the DU simulator (DESIGN.md §9).
+
+The paper's headline numbers come from sweeping configurations — DU
+sizings, schedules, systems — across the nine Table-1 kernels, not from
+single points. This package turns the three single-shot layers
+(compile front-end, AGU trace compiler, simulator engines) into a
+many-point service:
+
+  * ``SweepSpec`` (``dse.spec``) — a grid/list of sweep points:
+    kernel × scale × mode × engine × trace_mode × ``SimParams`` sizing.
+  * the planner (``dse.planner``) — groups points by (kernel, scale),
+    **deduplicates** points whose results are provably identical
+    (trace modes produce bit-identical streams; STA ignores the
+    engine), and builds per-group shared artifacts: one compiled trace
+    set, one hazard analysis per forwarding class, one hooked oracle
+    run, shared §5.6 bit streams / LSQ rank tables, and recorded CU
+    scripts replayed per timing point (``dae.ReplayCU``).
+  * the runner (``dse.runner``) — exact per-point engine runs on the
+    shared artifacts (bit-identical to standalone ``simulate()``),
+    optionally parallel across groups, with a config-batched
+    forwarding-admissibility profile through ``du.check_pair_batch``.
+  * the cache (``dse.cache``) — an on-disk result store keyed by
+    (code version, program, arrays, params, mode, engine, sizing) so
+    repeated sweeps are incremental.
+
+Entry point::
+
+    from repro import dse
+    res = dse.sweep(dse.SweepSpec(kernels=["bnn"], modes=["STA", "FUS2"]))
+    for row in res.rows():
+        print(row["kernel"], row["mode"], row["cycles"])
+
+Evidence: ``benchmarks/sweep.py`` (committed as ``BENCH_DSE.json``)
+measures sweep throughput against the looped-``simulate()`` baseline
+and re-verifies per-point bit-identity at benchmark scale.
+"""
+
+from repro.dse.cache import ResultCache, code_version
+from repro.dse.planner import plan
+from repro.dse.runner import SweepResult, sweep
+from repro.dse.spec import SweepPoint, SweepSpec
+
+__all__ = [
+    "SweepPoint",
+    "SweepSpec",
+    "SweepResult",
+    "ResultCache",
+    "code_version",
+    "plan",
+    "sweep",
+]

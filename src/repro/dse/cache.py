@@ -1,0 +1,138 @@
+"""On-disk result cache for design-space sweeps (DESIGN.md §9).
+
+One entry per *result key*: a ``SimResult`` stored as an ``.npz``
+(final arrays + a JSON metadata member) under a content-addressed file
+name. The key hashes everything the result depends on — and nothing it
+does not:
+
+  * **code version** — sha256 over the source bytes of ``repro.core``
+    and ``repro.dse``; any change to the simulator/compiler/DSE code
+    invalidates every entry (conservative by design: results are cheap
+    to recompute relative to debugging a stale cache),
+  * **program** — ``Program.fingerprint()`` (structural IR hash),
+  * **data** — array names, dtypes, shapes and bytes; parameter values,
+  * **configuration** — mode, engine class (``"-"`` for STA, which has
+    no engine), and the canonical ``SimParams`` override tuple.
+
+``trace_mode`` is deliberately absent: compiled and interpreted AGU
+streams are bit-identical (the PR-2 contract), so all trace modes share
+one entry. Writes are atomic (tmp file + ``os.replace``), so concurrent
+sweeps at worst duplicate work, never corrupt entries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+import os
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+from repro.core import loopir as ir
+from repro.core.simulator import SimResult
+
+_CODE_VERSION: Optional[str] = None
+
+CACHE_FORMAT = 1
+
+
+def code_version() -> str:
+    """sha256 over the repro.core + repro.dse source files (cached)."""
+    global _CODE_VERSION
+    if _CODE_VERSION is None:
+        import repro.core
+        import repro.dse
+
+        h = hashlib.sha256()
+        for pkg in (repro.core, repro.dse):
+            root = os.path.dirname(pkg.__file__)
+            for fn in sorted(os.listdir(root)):
+                if fn.endswith(".py"):
+                    with open(os.path.join(root, fn), "rb") as f:
+                        h.update(fn.encode())
+                        h.update(f.read())
+        _CODE_VERSION = h.hexdigest()
+    return _CODE_VERSION
+
+
+def result_cache_key(
+    program: ir.Program,
+    arrays: dict[str, np.ndarray],
+    params: dict[str, int],
+    mode: str,
+    engine_class: str,
+    sim: tuple,
+    version: Optional[str] = None,
+) -> str:
+    """Content hash naming one cache entry (hex sha256)."""
+    h = hashlib.sha256()
+    h.update(f"format={CACHE_FORMAT}\x00".encode())
+    h.update((version or code_version()).encode())
+    h.update(program.fingerprint().encode())
+    for name in sorted(arrays):
+        a = np.ascontiguousarray(arrays[name])
+        h.update(f"{name}:{a.dtype.str}:{a.shape}\x00".encode())
+        h.update(a.tobytes())
+    h.update(repr(sorted((params or {}).items())).encode())
+    h.update(f"\x00{mode}\x00{engine_class}\x00{sim!r}".encode())
+    return h.hexdigest()
+
+
+class ResultCache:
+    """Directory of ``{key}.npz`` SimResult entries."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(path, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def _file(self, key: str) -> str:
+        return os.path.join(self.path, f"{key}.npz")
+
+    def get(self, key: str) -> Optional[SimResult]:
+        fn = self._file(key)
+        if not os.path.exists(fn):
+            self.misses += 1
+            return None
+        try:
+            with np.load(fn, allow_pickle=False) as z:
+                meta = json.loads(str(z["__meta__"]))
+                arrays = {
+                    k[len("A::"):]: z[k] for k in z.files if k.startswith("A::")
+                }
+        except Exception:
+            self.misses += 1  # unreadable/truncated entry: treat as miss
+            return None
+        self.hits += 1
+        return SimResult(
+            cycles=meta["cycles"],
+            arrays=arrays,
+            mode=meta["mode"],
+            dram_bursts=meta["dram_bursts"],
+            dram_requests=meta["dram_requests"],
+            forwards=meta["forwards"],
+        )
+
+    def put(self, key: str, result: SimResult) -> None:
+        meta = dataclasses.asdict(result)
+        meta.pop("arrays")
+        buf = io.BytesIO()
+        np.savez(
+            buf,
+            __meta__=np.array(json.dumps(meta)),
+            **{f"A::{k}": v for k, v in result.arrays.items()},
+        )
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(buf.getvalue())
+            os.replace(tmp, self._file(key))
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise

@@ -1,0 +1,199 @@
+"""Sweep planner: group, deduplicate, and share compiled artifacts.
+
+``plan()`` partitions sweep points into per-(kernel, scale) groups and
+collapses each group's points onto *unique runs* by ``result_key`` —
+the dedup exploits the two proven result-invariances (trace modes are
+bit-identical; STA ignores the engine; see ``dse.spec``).
+
+``GroupContext`` then materializes, lazily and at most once per group,
+everything a run needs that does not depend on timing parameters:
+
+  * the program + input arrays/params (``programs.REGISTRY``),
+  * ``Compiled`` per forwarding class (FUS2 forwards; the rest do not),
+  * one AGU trace set (``schedule.trace_program(mode="auto")``) shared
+    by every point — the trace-sharing contract of DESIGN.md §9; a
+    point that demands ``trace_mode="compiled"`` triggers the same
+    strict check (and the same ``TraceCompileError``) standalone
+    ``simulate()`` would raise,
+  * the hooked sequential oracle (final arrays + per-op load values),
+  * recorded CU scripts (``dae.record_cu_script``) replayed per run,
+  * §5.6 NoDependence bits over the union of both plans' pairs, and
+    the LSQ instance rank table,
+  * STA instance decomposition.
+
+All of these are pure functions of (program, arrays, params), so runs
+seeded with them are bit-identical to standalone ``simulate()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Optional
+
+from repro.core import dae as daelib
+from repro.core import du as dulib
+from repro.core import loopir as ir
+from repro.core import programs
+from repro.core import schedule as schedlib
+from repro.core import simulator
+from repro.dse.spec import SweepPoint
+
+
+@dataclasses.dataclass
+class UniqueRun:
+    """One actual simulation serving one or more sweep points."""
+
+    key: tuple  # SweepPoint.result_key
+    rep: SweepPoint  # representative point (defines mode/engine/sim)
+    point_indices: list  # indices into the sweep's point list
+
+
+@dataclasses.dataclass
+class Group:
+    kernel: str
+    scale: int
+    runs: list  # [UniqueRun]
+
+    @property
+    def n_points(self) -> int:
+        return sum(len(r.point_indices) for r in self.runs)
+
+
+def plan(points: list[SweepPoint]) -> list[Group]:
+    """Group points by (kernel, scale) and dedup by result key."""
+    groups: dict[tuple, dict[tuple, UniqueRun]] = {}
+    for i, p in enumerate(points):
+        g = groups.setdefault((p.kernel, p.scale), {})
+        run = g.get(p.result_key)
+        if run is None:
+            g[p.result_key] = UniqueRun(key=p.result_key, rep=p, point_indices=[i])
+        else:
+            run.point_indices.append(i)
+    return [
+        Group(kernel=k, scale=s, runs=list(g.values()))
+        for (k, s), g in sorted(groups.items())
+    ]
+
+
+class GroupContext:
+    """Lazily-built shared artifacts for one (kernel, scale) group."""
+
+    def __init__(self, group: Group):
+        self.group = group
+        prog, arrays, params = programs.get(group.kernel).make(group.scale)
+        self.program = prog
+        self.arrays = arrays
+        self.params = params
+        self._strict_checked = False
+
+    # -- compile front-end -------------------------------------------------
+
+    @cached_property
+    def comp_fwd(self) -> simulator.Compiled:
+        return simulator.Compiled(self.program, forwarding=True)
+
+    @cached_property
+    def comp_nofwd(self) -> simulator.Compiled:
+        return simulator.Compiled(self.program, forwarding=False)
+
+    def comp(self, mode: str) -> simulator.Compiled:
+        return self.comp_fwd if mode == "FUS2" else self.comp_nofwd
+
+    @cached_property
+    def traces(self) -> dict[str, schedlib.OpTrace]:
+        """The single shared AGU trace set (compiled where possible)."""
+        return schedlib.trace_program(
+            self.program, self.comp_nofwd.dae, self.arrays, self.params,
+            mode="auto",
+        )
+
+    def check_strict_compiled(self) -> None:
+        """Raise ``TraceCompileError`` exactly as ``simulate()`` with
+        ``trace_mode="compiled"`` would, if any PE is off the compiled
+        path. (The streams themselves are shared either way.)"""
+        if not self._strict_checked:
+            report: dict = {}
+            schedlib.trace_program(
+                self.program, self.comp_nofwd.dae, self.arrays, self.params,
+                mode="compiled", report=report,
+            )
+            self._strict_checked = True
+
+    # -- oracle ------------------------------------------------------------
+
+    @cached_property
+    def _oracle(self) -> tuple:
+        loads: dict[str, list] = {}
+
+        def hook(op_id, addr, is_store, valid, value):
+            if not is_store:
+                loads.setdefault(op_id, []).append(value)
+
+        final = ir.interpret(self.program, self.arrays, self.params, hook)
+        return final, loads
+
+    @property
+    def final_arrays(self) -> dict:
+        return self._oracle[0]
+
+    @property
+    def oracle_loads(self) -> dict:
+        return self._oracle[1]
+
+    # -- shared engine state -----------------------------------------------
+
+    @cached_property
+    def cu_scripts(self) -> dict[int, daelib.CUScript]:
+        return {
+            pe.id: daelib.record_cu_script(
+                pe, self.arrays, self.params, self.oracle_loads
+            )
+            for pe in self.comp_nofwd.dae.pes
+        }
+
+    def cu_factory(self, pe: daelib.PE) -> daelib.ReplayCU:
+        return daelib.ReplayCU(self.cu_scripts[pe.id])
+
+    @cached_property
+    def nodep_bits(self) -> dict:
+        """§5.6 bit streams over the union of both forwarding classes'
+        kept pairs (engines look entries up by (dst, src) id)."""
+        pairs = {
+            (p.dst, p.src): p
+            for p in self.comp_nofwd.plan.pairs + self.comp_fwd.plan.pairs
+        }
+        return dulib.nodependence_bits(list(pairs.values()), self.traces)
+
+    @cached_property
+    def rank_table(self) -> tuple:
+        comp = self.comp_nofwd
+        fuse = {pe.id: pe.id for pe in comp.dae.pes}
+        return schedlib.instance_rank_table(
+            self.traces, comp.dae, comp.loop_pos, comp.op_pos, fuse,
+            comp.op_path,
+        )
+
+    @cached_property
+    def sta_instances(self) -> tuple:
+        comp = self.comp_nofwd
+        fuse = simulator._fusion_groups_sta(comp)
+        return simulator._instances(comp, self.traces, fuse)
+
+    # -- assembly ----------------------------------------------------------
+
+    def shared_for(self, mode: str) -> simulator.SharedArtifacts:
+        """The ``SharedArtifacts`` bundle for one run of this group."""
+        if mode == "STA":
+            return simulator.SharedArtifacts(
+                sta_instances=self.sta_instances,
+                final_arrays=self.final_arrays,
+            )
+        return simulator.SharedArtifacts(
+            nodep_bits=self.nodep_bits,
+            rank_table=self.rank_table if mode == "LSQ" else None,
+            cu_factory=self.cu_factory,
+        )
+
+    def oracle_loads_if(self, validate: bool) -> Optional[dict]:
+        return self.oracle_loads if validate else None

@@ -1,0 +1,343 @@
+"""Batched sweep runner: exact per-point runs on shared artifacts.
+
+``sweep()`` is the public entry point (re-exported as ``dse.sweep``).
+Execution model:
+
+  * the planner collapses the requested points onto unique runs and
+    groups them per (kernel, scale);
+  * each group builds its shared artifacts once (``GroupContext``) and
+    executes its unique runs with ``simulator.simulate_traced`` /
+    the engines directly — **bit-identical** to standalone
+    ``simulate()`` because every shared artifact is timing-independent
+    (DESIGN.md §9; asserted per point by tests/test_dse.py and at
+    benchmark scale by benchmarks/sweep.py);
+  * a result cache (``dse.cache``) short-circuits runs whose key was
+    computed by any previous sweep under the same code version;
+  * groups execute in parallel across processes when ``workers > 1``
+    (results are deterministic, so the worker count cannot change any
+    value);
+  * with ``profile=True`` the runner also emits the §5.5
+    forwarding-admissibility profile: for every forwarding pair it
+    reconstructs each FUS2 config's next-request frontier at the
+    consumer's recorded issue cycles and evaluates the forwarding-form
+    hazard check for *all configs of the group in one call* through the
+    config-batched ``du.check_pair_batch`` (leading config axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import du as dulib
+from repro.core import schedule as schedlib
+from repro.core import simulator
+from repro.dse import cache as cachelib
+from repro.dse.planner import Group, GroupContext, UniqueRun, plan
+from repro.dse.spec import SweepPoint, SweepSpec
+
+SENTINEL = int(schedlib.SENTINEL)
+
+
+@dataclasses.dataclass
+class PointResult:
+    """One sweep point's outcome. ``result.arrays`` may be shared with
+    other points deduplicated onto the same unique run — treat results
+    as read-only."""
+
+    point: SweepPoint
+    result: simulator.SimResult
+    run_key: tuple
+    cached: bool
+    run_wall_s: float
+
+
+@dataclasses.dataclass
+class SweepResult:
+    points: list  # [PointResult] aligned with the requested point list
+    n_points: int
+    n_unique_runs: int
+    n_cache_hits: int
+    wall_s: float
+    groups: list  # per-group {"kernel", "scale", "points", "runs", "wall_s"}
+    profile: list  # §5.5 admissibility rows (empty unless profile=True)
+
+    def rows(self) -> list:
+        """Flat per-point dict rows (for ``launch.analysis`` helpers)."""
+        out = []
+        for pr in self.points:
+            p, r = pr.point, pr.result
+            out.append({
+                "kernel": p.kernel, "scale": p.scale, "mode": p.mode,
+                "engine": p.engine, "trace_mode": p.trace_mode,
+                "sizing": p.sizing, "sim": dict(p.sim),
+                "cycles": r.cycles, "dram_bursts": r.dram_bursts,
+                "dram_requests": r.dram_requests, "forwards": r.forwards,
+                "cached": pr.cached, "run_wall_s": pr.run_wall_s,
+            })
+        return out
+
+
+# ---------------------------------------------------------------------------
+# single-group execution (also the unit of worker parallelism)
+# ---------------------------------------------------------------------------
+
+
+def _frontier_rows(src_state: dict, cyc: np.ndarray):
+    """Next-request registers of a source port as of each cycle in
+    ``cyc``, reconstructed from its recorded issue cycles (the same
+    derivation as ``EventEngine._frontier_at``, §4.2(4) sentinel
+    included)."""
+    n = len(src_state["addr"])
+    depth = src_state["sched"].shape[1] if src_state["sched"].ndim == 2 else 0
+    if n == 0:
+        m = len(cyc)
+        return (
+            np.full((m, depth), SENTINEL, dtype=np.int64),
+            np.full(m, SENTINEL, dtype=np.int64),
+            np.ones((m, depth), dtype=bool),
+        )
+    nxt = np.searchsorted(src_state["issue_cycle"], cyc, side="right")
+    done = nxt >= n
+    idx = np.minimum(nxt, n - 1)
+    f_sched = np.where(done[:, None], SENTINEL, src_state["sched"][idx])
+    f_addr = np.where(done, SENTINEL, src_state["addr"][idx])
+    f_last = np.where(done[:, None], True, src_state["lastiter"][idx])
+    return f_sched, f_addr, f_last
+
+
+def _forward_admissibility(ctx: GroupContext, fus2_states: dict) -> list:
+    """§5.5 forwarding-slack profile, config-batched.
+
+    ``fus2_states`` maps a config label -> per-op recorded port state of
+    one FUS2 event-engine run. For every forwarding pair, each config's
+    next-request frontier is reconstructed **one cycle before** each
+    consumer request's recorded issue cycle, and the forwarding-form
+    hazard check is evaluated for *all configs of the group in one*
+    ``check_pair_batch`` call with a leading config axis.
+
+    The returned ``slack_frac`` is the fraction of consumer requests
+    that were already §5.5-admissible a cycle before they issued: high
+    means the port was paced by II-1/bandwidth/waves (sizing-bound),
+    low means issues were released by the hazard check itself
+    (dependence-bound) — the attribution a DU-sizing sweep is after.
+    """
+    rows = []
+    labels = sorted(fus2_states)
+    if not labels:
+        return rows
+    for pair in ctx.comp_fwd.plan.pairs:
+        if pair.kind != "RAW":
+            continue
+        dst_tr = ctx.traces[pair.dst]
+        src_tr = ctx.traces[pair.src]
+        if not src_tr.is_store or dst_tr.n_req == 0:
+            continue
+        stacked = [
+            _frontier_rows(
+                fus2_states[c][pair.src],
+                fus2_states[c][pair.dst]["issue_cycle"] - 1,
+            )
+            for c in labels
+        ]
+        frontier = tuple(
+            np.stack([s[j] for s in stacked]) for j in range(3)
+        )
+        bits = ctx.nodep_bits.get((pair.dst, pair.src))
+        ok = dulib.check_pair_batch(
+            pair, dst_tr.sched, dst_tr.addr, None, True,
+            bits if pair.nodependence else None,
+            frontier=frontier,
+        )
+        ok = np.broadcast_to(ok, (len(labels), dst_tr.n_req))
+        rows.append({
+            "kernel": ctx.group.kernel,
+            "pair": (pair.dst, pair.src),
+            "configs": labels,
+            "slack_frac": [round(float(r.mean()), 4) for r in ok],
+        })
+    return rows
+
+
+def _port_state(port) -> dict:
+    return {
+        "sched": port.sched, "addr": port.addr, "lastiter": port.lastiter,
+        "issue_cycle": port.issue_cycle,
+    }
+
+
+def _execute_run(ctx: GroupContext, run: UniqueRun, validate: bool):
+    """Run one unique point exactly; returns (SimResult, port states or
+    None). The dispatch mirrors ``simulator.simulate_traced`` — the
+    event engine is instantiated directly only to keep its ports for
+    the profile."""
+    rep = run.rep
+    p = rep.sim_params()
+    mode = rep.mode
+    shared = ctx.shared_for(mode)
+    oracle_loads = ctx.oracle_loads_if(validate and mode != "STA")
+    if mode == "STA" or rep.engine == "cycle":
+        res = simulator.simulate_traced(
+            ctx.comp(mode), ctx.traces, ctx.arrays, ctx.params, mode=mode,
+            sim=p, engine=rep.engine, oracle_loads=oracle_loads,
+            shared=shared,
+        )
+        return res, None
+    from repro.core import engine_event
+
+    ev = engine_event.EventEngine(
+        ctx.comp(mode), ctx.traces, ctx.arrays, ctx.params, mode, p,
+        oracle_loads=oracle_loads, shared=shared,
+    )
+    res = ev.run()
+    states = {op: _port_state(port) for op, port in ev.ports.items()}
+    return res, states
+
+
+def _run_group_task(args):
+    """Execute one group (worker-safe: rebuilds everything from names)."""
+    (group, trace_modes, cache_dir, validate, profile) = args
+    t0 = time.perf_counter()
+    ctx = GroupContext(group)
+    cache = cachelib.ResultCache(cache_dir) if cache_dir else None
+    if "compiled" in trace_modes:
+        ctx.check_strict_compiled()
+    out: dict[tuple, tuple] = {}
+    fus2_states: dict[str, dict] = {}
+    profile_skipped: list[str] = []
+
+    def _label(rep):
+        # sizing is display-only and may collide across unique runs;
+        # disambiguate with the projected sim overrides
+        base = f"{rep.sizing}/{rep.engine}"
+        if base in fus2_states or base in profile_skipped:
+            base = f"{base}{dict(rep.relevant_sim)}"
+        return base
+
+    for run in group.runs:
+        rep = run.rep
+        key = None
+        if cache is not None:
+            key = cachelib.result_cache_key(
+                ctx.program, ctx.arrays, ctx.params, rep.mode,
+                "-" if rep.mode == "STA" else rep.engine, rep.relevant_sim,
+            )
+            # validate=True means "actually check this configuration":
+            # cached results carry no validation, so only write-through
+            hit = None if (validate and rep.mode != "STA") else cache.get(key)
+            if hit is not None:
+                out[run.key] = (hit, True, 0.0)
+                if profile and rep.mode == "FUS2" and rep.engine == "event":
+                    # port states are not cached: this config cannot
+                    # appear in the slack profile — surface that
+                    profile_skipped.append(_label(rep))
+                continue
+        t1 = time.perf_counter()
+        res, states = _execute_run(ctx, run, validate)
+        wall = time.perf_counter() - t1
+        if cache is not None:
+            cache.put(key, res)
+        out[run.key] = (res, False, wall)
+        if profile and states is not None and rep.mode == "FUS2":
+            fus2_states[_label(rep)] = states
+    prof = _forward_admissibility(ctx, fus2_states) if profile else []
+    stats = {
+        "kernel": group.kernel,
+        "scale": group.scale,
+        "points": group.n_points,
+        "runs": len(group.runs),
+        "cache_hits": sum(1 for r in out.values() if r[1]),
+        "wall_s": round(time.perf_counter() - t0, 4),
+    }
+    if profile_skipped:
+        stats["profile_skipped"] = profile_skipped
+    return out, stats, prof
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
+
+def sweep(
+    spec: Union[SweepSpec, Sequence[SweepPoint]],
+    *,
+    cache_dir: Optional[str] = None,
+    workers: int = 1,
+    validate: bool = False,
+    profile: bool = False,
+) -> SweepResult:
+    """Run a batched design-space sweep.
+
+    ``spec`` is a ``SweepSpec`` grid or an explicit point list. Every
+    requested point receives a ``SimResult`` **bit-identical to a
+    standalone** ``simulate(...)`` **call with the same settings** —
+    dedup, trace sharing, CU replay, caching and worker parallelism are
+    all result-invariant (DESIGN.md §9 states the argument; the
+    differential tests enforce it).
+
+    ``cache_dir`` enables the on-disk result cache (repeated sweeps
+    only pay for new points); ``workers > 1`` runs groups in parallel
+    processes; ``validate`` turns on per-request oracle validation
+    inside the engines — and therefore bypasses cache *reads* for the
+    dynamic modes (a cached result carries no validation; results are
+    still written through); ``profile`` adds the config-batched §5.5
+    forwarding-slack rows to ``SweepResult.profile``. The profile is
+    built from recorded port states, so it covers only configs that
+    actually ran this sweep — FUS2 runs served from the cache are
+    listed under ``profile_skipped`` in their group's stats instead.
+    """
+    t0 = time.perf_counter()
+    points = list(spec.points() if isinstance(spec, SweepSpec) else spec)
+    groups = plan(points)
+    tasks = []
+    for g in groups:
+        tms = {
+            points[i].trace_mode for r in g.runs for i in r.point_indices
+        }
+        tasks.append((g, tms, cache_dir, validate, profile))
+
+    if workers > 1 and len(tasks) > 1:
+        import concurrent.futures as cf
+        import multiprocessing as mp
+
+        n = min(workers, len(tasks), os.cpu_count() or 1)
+        # spawn, not fork: parent processes may hold multithreaded
+        # runtimes (JAX) that are not fork-safe
+        with cf.ProcessPoolExecutor(
+            max_workers=n, mp_context=mp.get_context("spawn")
+        ) as ex:
+            outcomes = list(ex.map(_run_group_task, tasks))
+    else:
+        outcomes = [_run_group_task(t) for t in tasks]
+
+    by_key: dict[tuple, tuple] = {}
+    group_stats = []
+    profile_rows: list = []
+    for g, (out, stats, prof) in zip(groups, outcomes):
+        by_key.update(out)
+        group_stats.append(stats)
+        profile_rows.extend(prof)
+
+    results: list[Optional[PointResult]] = [None] * len(points)
+    for g in groups:
+        for run in g.runs:
+            res, cached, wall = by_key[run.key]
+            for i in run.point_indices:
+                results[i] = PointResult(
+                    point=points[i], result=res, run_key=run.key,
+                    cached=cached, run_wall_s=wall,
+                )
+    return SweepResult(
+        points=results,
+        n_points=len(points),
+        n_unique_runs=sum(len(g.runs) for g in groups),
+        n_cache_hits=sum(s["cache_hits"] for s in group_stats),
+        wall_s=time.perf_counter() - t0,
+        groups=group_stats,
+        profile=profile_rows,
+    )

@@ -1,0 +1,182 @@
+"""Sweep specification: the configuration grid of a design-space run.
+
+A *sweep point* is one fully specified simulation:
+``(kernel, scale, mode, engine, trace_mode, SimParams sizing)``. A
+``SweepSpec`` expands a grid (or several stacked grids) into points.
+
+Two distinct notions of identity matter downstream:
+
+  * ``point_id`` — the user-facing identity; every requested point gets
+    its own row in the sweep result.
+  * ``result_key`` — the *result* identity used for dedup and caching:
+    points that provably produce bit-identical ``SimResult``s share it.
+    Three result-invariances fold points together (DESIGN.md §9.1):
+
+      1. ``trace_mode`` is excluded entirely (compiled and interpreted
+         AGU streams are bit-for-bit equal — the PR-2 contract asserted
+         by tests/test_trace_compile.py and tests/test_engine_diff.py),
+      2. ``engine`` is excluded for STA (the analytical model never
+         runs an engine),
+      3. the ``SimParams`` overrides are **projected onto the fields
+         the mode actually reads** (``MODE_SIM_FIELDS``): STA never
+         reads CU/forwarding latencies, the dynamic engines never read
+         ``sta_mem_dep_ii``/``pipeline_fill``, LSQ forces burst size 1,
+         and FUS1/LSQ never forward — so e.g. a calibration grid over
+         ``sta_mem_dep_ii`` x all four systems re-runs only STA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+from repro.core import programs
+from repro.core.simulator import SimParams
+
+MODES = ("STA", "LSQ", "FUS1", "FUS2")
+ENGINES = ("cycle", "event")
+TRACE_MODES = ("auto", "compiled", "interp")
+
+_SIM_FIELDS = tuple(f.name for f in dataclasses.fields(SimParams))
+
+# SimParams fields each mode actually reads (audited against
+# simulator._simulate_sta and the two engines; the batch-vs-single
+# differential in tests/test_dse.py would catch any drift). The result
+# identity of a point projects its overrides onto this set.
+_DYN_COMMON = (
+    "dram_latency", "burst_timeout", "channel_occupancy", "cu_latency",
+    "max_cycles",
+)
+MODE_SIM_FIELDS = {
+    "STA": (
+        "dram_latency", "burst_size", "channel_occupancy",
+        "pipeline_fill", "sta_mem_dep_ii",
+    ),
+    "LSQ": _DYN_COMMON,  # burst size forced to 1; never forwards
+    "FUS1": _DYN_COMMON + ("burst_size",),  # never forwards
+    "FUS2": _DYN_COMMON + ("burst_size", "forward_latency"),
+}
+
+
+def _canon_sim(sim: Union[None, dict, SimParams]) -> tuple:
+    """Canonical sorted (field, value) tuple of non-default overrides."""
+    if sim is None:
+        return ()
+    if isinstance(sim, SimParams):
+        sim = dataclasses.asdict(sim)
+    elif isinstance(sim, (tuple, list)):
+        sim = dict(sim)
+    default = SimParams()
+    out = []
+    for k in sorted(sim):
+        if k not in _SIM_FIELDS:
+            raise ValueError(f"unknown SimParams field {k!r}")
+        v = int(sim[k])
+        if v != getattr(default, k):
+            out.append((k, v))
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One simulation configuration of the design space."""
+
+    kernel: str  # a programs.REGISTRY name
+    scale: int
+    mode: str = "FUS2"
+    engine: str = "event"
+    trace_mode: str = "auto"
+    sim: tuple = ()  # canonical ((field, value), ...) SimParams overrides
+    sizing: str = "base"  # display label for the sim overrides
+
+    def __post_init__(self):
+        assert self.kernel in programs.REGISTRY, f"unknown kernel {self.kernel!r}"
+        assert self.mode in MODES, f"unknown mode {self.mode!r}"
+        assert self.engine in ENGINES, f"unknown engine {self.engine!r}"
+        assert self.trace_mode in TRACE_MODES, (
+            f"unknown trace mode {self.trace_mode!r}"
+        )
+        object.__setattr__(self, "sim", _canon_sim(self.sim))
+
+    def sim_params(self) -> SimParams:
+        return dataclasses.replace(SimParams(), **dict(self.sim))
+
+    @property
+    def point_id(self) -> tuple:
+        return (
+            self.kernel, self.scale, self.mode, self.engine,
+            self.trace_mode, self.sim,
+        )
+
+    @property
+    def relevant_sim(self) -> tuple:
+        """``sim`` projected onto the fields this point's mode reads
+        (``MODE_SIM_FIELDS``) — the SimParams part of the result
+        identity."""
+        fields = MODE_SIM_FIELDS[self.mode]
+        return tuple((k, v) for k, v in self.sim if k in fields)
+
+    @property
+    def result_key(self) -> tuple:
+        """Dedup/cache identity: what the SimResult depends on.
+
+        Excludes ``trace_mode`` entirely, ``engine`` for STA, and any
+        SimParams override the mode never reads — the three
+        result-invariances the planner exploits (DESIGN.md §9.1).
+        """
+        engine_class = "-" if self.mode == "STA" else self.engine
+        return (
+            self.kernel, self.scale, self.mode, engine_class,
+            self.relevant_sim,
+        )
+
+
+@dataclasses.dataclass
+class SweepSpec:
+    """A grid of sweep points (cross product of the axes).
+
+    ``sizings`` maps a label to ``SimParams`` overrides (a dict of
+    field -> value, or a full ``SimParams``); ``{"base": {}}`` is the
+    default timing model. ``scales`` maps kernel -> problem scale and
+    defaults to each kernel's registered ``default_scale`` divided by
+    ``scale_div`` (tests use large divisors to stay tiny). Several
+    grids can be stacked via ``extra`` (e.g. an STA-only engine grid);
+    duplicate points are dropped at expansion.
+    """
+
+    kernels: Sequence[str] = tuple(programs.TABLE1)
+    scales: Optional[dict] = None
+    scale_div: int = 1
+    modes: Sequence[str] = ("STA", "LSQ", "FUS1", "FUS2")
+    engines: Sequence[str] = ("event",)
+    trace_modes: Sequence[str] = ("auto",)
+    sizings: Optional[dict] = None
+    extra: Sequence["SweepSpec"] = ()
+
+    def points(self) -> list[SweepPoint]:
+        sizings = self.sizings if self.sizings is not None else {"base": {}}
+        out: list[SweepPoint] = []
+        seen: set[tuple] = set()
+        for k in self.kernels:
+            if self.scales is not None:
+                scale = int(self.scales[k])
+            else:
+                scale = max(programs.REGISTRY[k].default_scale // self.scale_div, 8)
+            for mode in self.modes:
+                for engine in self.engines:
+                    for tm in self.trace_modes:
+                        for label, sim in sizings.items():
+                            p = SweepPoint(
+                                kernel=k, scale=scale, mode=mode,
+                                engine=engine, trace_mode=tm,
+                                sim=_canon_sim(sim), sizing=label,
+                            )
+                            if p.point_id not in seen:
+                                seen.add(p.point_id)
+                                out.append(p)
+        for sub in self.extra:
+            for p in sub.points():
+                if p.point_id not in seen:
+                    seen.add(p.point_id)
+                    out.append(p)
+        return out

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel adaptations of the paper's disambiguation primitives
+(DESIGN.md §2-3, §8): frontier merge (``du_hazard``), fused
+producer/consumer streams (``fused_stream``), plus the workload kernels
+(``csr_spmv``, ``histogram``, ``attention``, ``moe_group_mm``,
+``ssm_scan``). Each has kernel.py / ops.py / ref.py."""

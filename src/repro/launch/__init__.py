@@ -1,0 +1,3 @@
+"""Drivers and analysis: training/serving entry points, dry-run HLO
+cost model, roofline + design-space sweep summarization
+(``repro.launch.analysis``)."""

@@ -1,4 +1,5 @@
-"""Compiled-artifact analysis: roofline terms from the dry-run.
+"""Compiled-artifact analysis: roofline terms from the dry-run, plus
+design-space sweep summarization (Pareto fronts, per-kernel speedups).
 
 Hardware constants (assignment-specified, TPU v5e-like):
   197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
@@ -163,6 +164,124 @@ def memory_report(compiled) -> dict:
         + rep.get("output_size_in_bytes", 0) - alias
     )
     return rep
+
+
+# ---------------------------------------------------------------------------
+# design-space sweep summarization (consumed by benchmarks/sweep.py on
+# repro.dse.SweepResult.rows(); operates on plain dict rows so it has no
+# dependency on the dse package)
+# ---------------------------------------------------------------------------
+
+
+def harmonic_mean(xs) -> float:
+    xs = [x for x in xs if x > 0]
+    return len(xs) / sum(1.0 / x for x in xs) if xs else 0.0
+
+
+def sweep_speedups(rows: list, base_modes=("STA", "LSQ")) -> dict:
+    """Per-kernel and harmonic-mean FUS2 speedups from sweep rows.
+
+    ``rows`` are ``dse.SweepResult.rows()`` dicts (needs ``kernel``,
+    ``mode``, ``sizing``, ``cycles``). Speedups compare FUS2 against
+    each base mode *at the same kernel/sizing/scale*; kernels or
+    sizings missing either side are skipped. Returns
+    ``{"per_kernel": {kernel: {"FUS2_vs_STA": ...}}, "hmean": {...}}``
+    computed at the ``"base"`` sizing when present (else the first
+    sizing seen), mirroring paper Table 1's headline structure.
+    """
+    cyc: dict[tuple, int] = {}
+    sizings: list = []
+    for r in rows:
+        key = (r["kernel"], r["scale"], r["sizing"], r["mode"])
+        cyc.setdefault(key, r["cycles"])
+        if r["sizing"] not in sizings:
+            sizings.append(r["sizing"])
+    ref_sizing = "base" if "base" in sizings else (sizings[0] if sizings else "base")
+    # one scale per kernel keys rows by kernel name; multi-scale sweeps
+    # key by "kernel@scale" so scales don't overwrite each other
+    kernel_scales: dict = {}
+    for (kernel, scale, _sizing, _mode) in cyc:
+        kernel_scales.setdefault(kernel, set()).add(scale)
+    per_kernel: dict = {}
+    for (kernel, scale, sizing, mode) in list(cyc):
+        if sizing != ref_sizing or mode != "FUS2":
+            continue
+        f2 = cyc[(kernel, scale, sizing, "FUS2")]
+        name = (
+            kernel if len(kernel_scales[kernel]) == 1 else f"{kernel}@{scale}"
+        )
+        ks = per_kernel.setdefault(name, {})
+        for base in base_modes:
+            b = cyc.get((kernel, scale, sizing, base))
+            if b is not None and f2 > 0:
+                ks[f"FUS2_vs_{base}"] = round(b / f2, 3)
+    hmean = {}
+    for base in base_modes:
+        vals = [
+            k[f"FUS2_vs_{base}"]
+            for k in per_kernel.values()
+            if f"FUS2_vs_{base}" in k
+        ]
+        if vals:
+            hmean[f"FUS2_vs_{base}_hmean"] = round(harmonic_mean(vals), 3)
+    return {"per_kernel": per_kernel, "hmean": hmean, "sizing": ref_sizing}
+
+
+def pareto_front(rows: list, objectives=("cycles", "dram_bursts")) -> list:
+    """Indices of the Pareto-optimal rows (all objectives minimized).
+
+    A row is kept when no other row is <= on every objective and < on
+    at least one. Ties (exactly equal vectors) keep the first
+    occurrence. Typical use: per kernel, find the DU sizings that trade
+    simulated cycles against DRAM traffic."""
+    vecs = [tuple(r[o] for o in objectives) for r in rows]
+    keep = []
+    for i, v in enumerate(vecs):
+        dominated = False
+        for j, w in enumerate(vecs):
+            if j == i:
+                continue
+            if all(a <= b for a, b in zip(w, v)) and (
+                any(a < b for a, b in zip(w, v)) or (w == v and j < i)
+            ):
+                dominated = True
+                break
+        if not dominated:
+            keep.append(i)
+    return keep
+
+
+def summarize_sweep(rows: list) -> dict:
+    """Sweep-level digest: speedups + per-kernel Pareto sizings.
+
+    The Pareto set is computed over FUS2 rows per kernel (one per
+    sizing) on (cycles, dram_bursts) — the DU cost/performance
+    trade-off the paper's LSQ-sizing discussion gestures at."""
+    out = {"speedups": sweep_speedups(rows)}
+    pareto: dict = {}
+    by_kernel: dict = {}
+    if not rows:
+        out["pareto_fus2"] = pareto
+        return out
+    for r in rows:
+        if r["mode"] == "FUS2":
+            by_kernel.setdefault(r["kernel"], []).append(r)
+    for kernel, krows in by_kernel.items():
+        seen: dict = {}
+        for r in krows:
+            seen.setdefault(r["sizing"], r)
+        krows = list(seen.values())
+        idx = pareto_front(krows)
+        pareto[kernel] = [
+            {
+                "sizing": krows[i]["sizing"],
+                "cycles": krows[i]["cycles"],
+                "dram_bursts": krows[i]["dram_bursts"],
+            }
+            for i in idx
+        ]
+    out["pareto_fus2"] = pareto
+    return out
 
 
 def model_flops(cfg, shape) -> float:

@@ -1,0 +1,2 @@
+"""Model definitions (transformer/SSM families) and sharding context
+used by the launch drivers."""

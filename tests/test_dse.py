@@ -1,0 +1,286 @@
+"""Batch-vs-single exactness of the DSE sweep engine (DESIGN.md §9).
+
+The contract under test: every sweep point's SimResult — cycles, DRAM
+traffic, forwarding count, final arrays — is **bit-identical** to a
+standalone ``simulate()`` call with the same settings, across all nine
+Table-1 kernels, all four modes, both engines, both trace modes, and
+multiple DU sizings; and neither dedup, nor trace/CU/oracle sharing,
+nor worker parallelism, nor the result cache can change any value.
+"""
+
+import numpy as np
+import pytest
+
+from repro import dse
+from repro.core import programs, simulator
+
+# small enough to keep the (sweep + standalone re-run) matrix inside the
+# tier-1 budget; every kernel still exercises its hazard structure
+SCALES = {
+    "RAWloop": 32, "WARloop": 32, "WAWloop": 32, "bnn": 16,
+    "pagerank": 24, "fft": 64, "matpower": 16, "hist+add": 64,
+    "tanh+spmv": 24,
+}
+
+SIZINGS = {"base": {}, "narrow": {"burst_size": 4, "dram_latency": 64}}
+
+
+def _assert_point_matches_standalone(pr):
+    p = pr.point
+    prog, arrays, params = programs.get(p.kernel).make(p.scale)
+    base = simulator.simulate(
+        prog, arrays, params, mode=p.mode, sim=p.sim_params(),
+        engine=p.engine, trace_mode=p.trace_mode,
+    )
+    got = pr.result
+    assert got.cycles == base.cycles, (p, base.cycles, got.cycles)
+    assert got.dram_bursts == base.dram_bursts, p
+    assert got.dram_requests == base.dram_requests, p
+    assert got.forwards == base.forwards, p
+    assert set(got.arrays) == set(base.arrays), p
+    for k in base.arrays:
+        np.testing.assert_array_equal(
+            got.arrays[k], base.arrays[k],
+            err_msg=f"{p}: sweep diverged from standalone on array {k}",
+        )
+
+
+# kernels whose trace streams stress the compiled/interp front-end
+# differently (CSR gathers, non-monotonic stores, multiplicative ivars):
+# these also verify the interp-trace-mode points against standalone
+# simulate(trace_mode="interp") — i.e. the planner's trace-mode dedup
+_INTERP_KERNELS = ("bnn", "hist+add", "fft")
+
+
+@pytest.mark.parametrize("kernel", programs.TABLE1)
+def test_sweep_matches_standalone(kernel):
+    """All four modes x two sizings (x two trace modes on the irregular
+    kernels): the batched runner's shared artifacts (compiled traces,
+    CU replay scripts, oracle, nodep bits, rank tables) must not change
+    a bit vs standalone simulate()."""
+    tms = ("auto", "interp") if kernel in _INTERP_KERNELS else ("auto",)
+    spec = dse.SweepSpec(
+        kernels=[kernel], scales=SCALES,
+        modes=("STA", "LSQ", "FUS1", "FUS2"),
+        trace_modes=tms,
+        sizings=SIZINGS,
+    )
+    res = dse.sweep(spec, validate=True)
+    assert res.n_points == 8 * len(tms)
+    # trace modes dedup onto one run each: 4 modes x 2 sizings unique
+    assert res.n_unique_runs == 8
+    for pr in res.points:
+        _assert_point_matches_standalone(pr)
+
+
+def test_sweep_matches_standalone_cycle_engine():
+    """The reference cycle engine through the batch runner (incl. the
+    LSQ instance-window path with a shared rank table)."""
+    spec = dse.SweepSpec(
+        kernels=["RAWloop"], scales=SCALES,
+        modes=("LSQ", "FUS2"), engines=("cycle",),
+        sizings=SIZINGS,
+    )
+    res = dse.sweep(spec)
+    for pr in res.points:
+        _assert_point_matches_standalone(pr)
+
+
+def test_sta_engine_dedup():
+    """STA is engine-invariant: the planner collapses the engine axis
+    and both points share one (identical) result."""
+    spec = dse.SweepSpec(
+        kernels=["WAWloop"], scales=SCALES, modes=("STA",),
+        engines=("event", "cycle"),
+    )
+    res = dse.sweep(spec)
+    assert res.n_points == 2 and res.n_unique_runs == 1
+    a, b = res.points
+    assert a.result is b.result
+    _assert_point_matches_standalone(a)
+    _assert_point_matches_standalone(b)
+
+
+def test_workers_do_not_change_results():
+    spec = dse.SweepSpec(
+        kernels=["RAWloop", "hist+add", "tanh+spmv"], scales=SCALES,
+        modes=("STA", "FUS2"), sizings=SIZINGS,
+    )
+    serial = dse.sweep(spec, workers=1)
+    parallel = dse.sweep(spec, workers=2)
+    for a, b in zip(serial.points, parallel.points):
+        assert a.point == b.point
+        assert a.result.cycles == b.result.cycles
+        assert a.result.dram_bursts == b.result.dram_bursts
+        assert a.result.forwards == b.result.forwards
+        for k in a.result.arrays:
+            np.testing.assert_array_equal(a.result.arrays[k], b.result.arrays[k])
+
+
+def test_forward_slack_profile():
+    """profile=True emits per-pair config-batched §5.5 slack rows with
+    one fraction per FUS2 config, all within [0, 1]."""
+    spec = dse.SweepSpec(
+        kernels=["hist+add", "pagerank"], scales=SCALES,
+        modes=("FUS2",), sizings=SIZINGS,
+    )
+    res = dse.sweep(spec, profile=True)
+    assert res.profile, "expected §5.5 slack rows"
+    for row in res.profile:
+        assert len(row["configs"]) == 2  # two sizings
+        assert len(row["slack_frac"]) == 2
+        assert all(0.0 <= f <= 1.0 for f in row["slack_frac"])
+
+
+def test_spec_canonicalization_and_keys():
+    from repro.core.simulator import SimParams
+
+    a = dse.SweepPoint("RAWloop", 32, sim={"burst_size": 4})
+    b = dse.SweepPoint("RAWloop", 32, sim=(("burst_size", 4),))
+    c = dse.SweepPoint("RAWloop", 32, sim=SimParams(burst_size=4))
+    assert a.sim == b.sim == c.sim == (("burst_size", 4),)
+    # defaults canonicalize away
+    d = dse.SweepPoint("RAWloop", 32, sim={"burst_size": 16})
+    assert d.sim == ()
+    # trace_mode never enters the result key; engine only off STA
+    e1 = dse.SweepPoint("RAWloop", 32, mode="FUS2", trace_mode="interp")
+    e2 = dse.SweepPoint("RAWloop", 32, mode="FUS2", trace_mode="compiled")
+    assert e1.result_key == e2.result_key
+    s1 = dse.SweepPoint("RAWloop", 32, mode="STA", engine="cycle")
+    s2 = dse.SweepPoint("RAWloop", 32, mode="STA", engine="event")
+    assert s1.result_key == s2.result_key
+    f1 = dse.SweepPoint("RAWloop", 32, mode="FUS2", engine="cycle")
+    f2 = dse.SweepPoint("RAWloop", 32, mode="FUS2", engine="event")
+    assert f1.result_key != f2.result_key
+
+
+def test_sim_param_projection_dedup():
+    """Overrides a mode never reads fold onto the same run — and the
+    shared result still matches a standalone call carrying the
+    'irrelevant' override (i.e. the projection table is sound)."""
+    # FUS1 never forwards: forward_latency is irrelevant
+    spec = dse.SweepSpec(
+        kernels=["RAWloop"], scales=SCALES, modes=("FUS1",),
+        sizings={"base": {}, "fwd9": {"forward_latency": 9}},
+    )
+    res = dse.sweep(spec)
+    assert res.n_points == 2 and res.n_unique_runs == 1
+    for pr in res.points:
+        _assert_point_matches_standalone(pr)
+    # LSQ forces burst size 1: burst_size is irrelevant
+    spec = dse.SweepSpec(
+        kernels=["RAWloop"], scales=SCALES, modes=("LSQ",),
+        sizings={"base": {}, "b32": {"burst_size": 32}},
+    )
+    res = dse.sweep(spec)
+    assert res.n_unique_runs == 1
+    for pr in res.points:
+        _assert_point_matches_standalone(pr)
+    # dynamic engines never read the STA calibration knobs; STA never
+    # reads the CU latency — a 2-sizing grid x 2 modes = 4 points but
+    # only 3 distinct results (STA splits, FUS2 folds)
+    spec = dse.SweepSpec(
+        kernels=["RAWloop"], scales=SCALES, modes=("STA", "FUS2"),
+        sizings={"base": {}, "cal": {"sta_mem_dep_ii": 99}},
+    )
+    res = dse.sweep(spec)
+    assert res.n_points == 4 and res.n_unique_runs == 3
+    for pr in res.points:
+        _assert_point_matches_standalone(pr)
+
+
+def test_strict_compiled_point_raises_like_standalone():
+    """A trace_mode="compiled" point on a kernel outside the compiled
+    subset must raise the same TraceCompileError the standalone call
+    would (local-carried CSR row pointers force the interpreter)."""
+    from repro.core import loopir as ir
+    from repro.core.schedule import TraceCompileError
+
+    prog = ir.Program(
+        "local_addr",
+        loops=(
+            ir.Loop("i", ir.Param("n", 0, 16), (
+                ir.SetLocal("bin", ir.Read("d", ir.Var("i"), 0, 7)),
+                ir.Load("ld_h", "h", ir.Local("bin")),
+                ir.Store(
+                    "st_h", "h", ir.Local("bin"), ir.LoadVal("ld_h") + 1.0
+                ),
+            )),
+        ),
+        params=("n",),
+    )
+    rng = np.random.default_rng(3)
+    data = {
+        "h": np.zeros(8),
+        "d": rng.integers(0, 8, size=16).astype(np.float64),
+    }
+    programs.REGISTRY["_carried_test"] = programs.Bench(
+        "_carried_test", lambda s: (prog, data, {"n": 16}), "O(n)", 16,
+    )
+    try:
+        pt = dse.SweepPoint("_carried_test", 8, mode="FUS2", trace_mode="compiled")
+        with pytest.raises(TraceCompileError):
+            dse.sweep([pt])
+        # under "auto" the same kernel falls back per PE and runs fine
+        res = dse.sweep([dse.SweepPoint("_carried_test", 8, mode="FUS2")])
+        _assert_point_matches_standalone(res.points[0])
+    finally:
+        del programs.REGISTRY["_carried_test"]
+
+
+# ---------------------------------------------------------------------------
+# config-batched check_pair_batch: stacked configs == per-config calls
+# ---------------------------------------------------------------------------
+
+
+def test_check_pair_batch_config_axis_matches_per_config():
+    from repro.core import du as dulib
+    from repro.core import hazards as hz
+
+    rng = np.random.default_rng(7)
+    SEN = dulib.SENTINEL
+    for trial in range(120):
+        depth = int(rng.integers(1, 4))
+        k = int(rng.integers(0, depth + 1))
+        nonmono = sorted(
+            int(d) for d in rng.choice(
+                range(1, depth + 1),
+                size=int(rng.integers(0, depth + 1)), replace=False,
+            )
+        )
+        l_cands = [d for d in nonmono if d <= k]
+        pair = hz.HazardPair(
+            dst="a", src="b", kind="RAW", array="A",
+            shared_depth=k, dst_before_src=bool(rng.integers(2)),
+            wraparound=False, same_pe=bool(rng.integers(2)),
+            use_frontier=bool(rng.integers(2)),
+            l_depth=max(l_cands) if l_cands else None,
+            lastiter_depths=tuple(d for d in nonmono if d > k),
+            nodependence=bool(rng.integers(2)),
+        )
+        C = int(rng.integers(2, 5))
+        m = int(rng.integers(1, 7))
+        req_sched = rng.integers(0, 6, size=(m, depth)).astype(np.int64)
+        req_addr = rng.integers(0, 10, size=m).astype(np.int64)
+        f_sched = rng.integers(0, 6, size=(C, m, depth)).astype(np.int64)
+        f_sched[rng.random(size=(C, m)) < 0.15] = SEN
+        f_addr = rng.integers(-2, 12, size=(C, m)).astype(np.int64)
+        f_addr[rng.random(size=(C, m)) < 0.15] = SEN
+        f_last = rng.integers(0, 2, size=(C, m, depth)).astype(bool)
+        bits = rng.integers(0, 2, size=m).astype(bool)
+        nb = bits if pair.nodependence else None
+
+        stacked = dulib.check_pair_batch(
+            pair, req_sched, req_addr, None, True, nb,
+            frontier=(f_sched, f_addr, f_last),
+        )
+        stacked = np.broadcast_to(stacked, (C, m))
+        for c in range(C):
+            single = dulib.check_pair_batch(
+                pair, req_sched, req_addr, None, True, nb,
+                frontier=(f_sched[c], f_addr[c], f_last[c]),
+            )
+            np.testing.assert_array_equal(
+                stacked[c], np.broadcast_to(single, (m,)),
+                err_msg=f"trial {trial} config {c}: stacked != per-config",
+            )

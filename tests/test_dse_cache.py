@@ -1,0 +1,108 @@
+"""DSE result cache: hit/miss behaviour, bitwise round-trip, and
+invalidation on parameter and code-version change (DESIGN.md §9)."""
+
+import numpy as np
+import pytest
+
+from repro import dse
+from repro.core import programs, simulator
+from repro.dse import cache as cachelib
+
+SPEC = dict(kernels=["RAWloop"], scales={"RAWloop": 48}, modes=("STA", "FUS2"))
+
+
+def test_sweep_cold_then_warm(tmp_path):
+    spec = dse.SweepSpec(**SPEC, sizings={"base": {}, "n4": {"burst_size": 4}})
+    cold = dse.sweep(spec, cache_dir=str(tmp_path))
+    assert cold.n_cache_hits == 0
+    warm = dse.sweep(spec, cache_dir=str(tmp_path))
+    assert warm.n_cache_hits == warm.n_unique_runs == cold.n_unique_runs
+    for a, b in zip(cold.points, warm.points):
+        assert a.result.cycles == b.result.cycles
+        assert a.result.dram_bursts == b.result.dram_bursts
+        assert a.result.dram_requests == b.result.dram_requests
+        assert a.result.forwards == b.result.forwards
+        for k in a.result.arrays:
+            np.testing.assert_array_equal(
+                a.result.arrays[k], b.result.arrays[k],
+                err_msg="cache round-trip changed an array",
+            )
+    # cached results still match a fresh standalone call
+    p = warm.points[-1].point
+    prog, arrays, params = programs.get(p.kernel).make(p.scale)
+    base = simulator.simulate(
+        prog, arrays, params, mode=p.mode, sim=p.sim_params(),
+        engine=p.engine, trace_mode=p.trace_mode,
+    )
+    assert base.cycles == warm.points[-1].result.cycles
+
+
+def test_partial_warm_on_new_sizing(tmp_path):
+    """Growing the grid only pays for the new points (incremental)."""
+    small = dse.SweepSpec(**SPEC)
+    dse.sweep(small, cache_dir=str(tmp_path))
+    grown = dse.SweepSpec(**SPEC, sizings={"base": {}, "n4": {"burst_size": 4}})
+    res = dse.sweep(grown, cache_dir=str(tmp_path))
+    assert res.n_unique_runs == 4
+    assert res.n_cache_hits == 2  # the original base-sizing runs
+
+
+def test_key_sensitivity():
+    prog, arrays, params = programs.get("RAWloop").make(32)
+    base = cachelib.result_cache_key(prog, arrays, params, "FUS2", "event", ())
+    # params change
+    assert base != cachelib.result_cache_key(
+        prog, arrays, {**params, "n": 16}, "FUS2", "event", ()
+    )
+    # array contents change
+    arrays2 = {**arrays, "d0": arrays["d0"] + 1.0}
+    assert base != cachelib.result_cache_key(
+        prog, arrays2, params, "FUS2", "event", ()
+    )
+    # sizing / mode / engine class change
+    assert base != cachelib.result_cache_key(
+        prog, arrays, params, "FUS2", "event", (("burst_size", 4),)
+    )
+    assert base != cachelib.result_cache_key(
+        prog, arrays, params, "FUS1", "event", ()
+    )
+    assert base != cachelib.result_cache_key(
+        prog, arrays, params, "FUS2", "cycle", ()
+    )
+    # explicit code-version change
+    assert base != cachelib.result_cache_key(
+        prog, arrays, params, "FUS2", "event", (), version="not-this-code"
+    )
+    # structural program change
+    prog2, _, _ = programs.get("WARloop").make(32)
+    assert prog.fingerprint() != prog2.fingerprint()
+
+
+def test_code_version_change_invalidates(tmp_path, monkeypatch):
+    spec = dse.SweepSpec(**SPEC)
+    first = dse.sweep(spec, cache_dir=str(tmp_path))
+    assert first.n_cache_hits == 0
+    # simulate editing the simulator/dse sources between sweeps
+    monkeypatch.setattr(cachelib, "_CODE_VERSION", "f" * 64)
+    again = dse.sweep(spec, cache_dir=str(tmp_path))
+    assert again.n_cache_hits == 0  # every old entry invalidated
+    for a, b in zip(first.points, again.points):
+        assert a.result.cycles == b.result.cycles
+
+
+def test_corrupt_entry_is_a_miss(tmp_path):
+    cache = cachelib.ResultCache(str(tmp_path))
+    prog, arrays, params = programs.get("RAWloop").make(32)
+    key = cachelib.result_cache_key(prog, arrays, params, "FUS2", "event", ())
+    (tmp_path / f"{key}.npz").write_bytes(b"not an npz")
+    assert cache.get(key) is None
+    res = simulator.simulate(prog, arrays, params, mode="FUS2")
+    cache.put(key, res)
+    got = cache.get(key)
+    assert got is not None and got.cycles == res.cycles
+
+
+def test_code_version_is_stable_and_source_sensitive():
+    v1 = cachelib.code_version()
+    assert v1 == cachelib.code_version()
+    assert len(v1) == 64 and int(v1, 16) >= 0

@@ -148,6 +148,11 @@ def test_table1_kernels_take_compiled_path(name):
     assert all(r["path"] == "compiled" for r in report.values()), report
     ti = schedlib.trace_program(prog, d, arrays, params, mode="interp")
     _assert_traces_equal(ti, tc, name)
+    # key ORDER must match too: the trace dict's iteration order is the
+    # engines' deterministic port-scan order, so a path-dependent order
+    # resolves same-cycle ties differently (2-cycle drift on matpower at
+    # 8x scale before compile_pe_trace emitted pe.mem_ops order)
+    assert list(ti) == list(tc), (name, list(ti), list(tc))
 
 
 def test_fft_compiles_despite_non_affine_address():
