@@ -89,7 +89,10 @@ def bench_waves(emit):
     for name in programs.all_names():
         scale = 64 if name == "fft" else 96
         prog, arrays, params = programs.get(name).make(scale)
-        us, res = _t(executor.execute, prog, arrays, params, reps=1)
+        spec = "auto" if programs.get(name).speculative else "off"
+        us, res = _t(
+            executor.execute, prog, arrays, params, speculation=spec, reps=1
+        )
         emit(
             f"wave_{name}", us,
             f"requests={res.stats.n_requests};waves={res.stats.n_waves}"

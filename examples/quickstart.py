@@ -55,6 +55,29 @@ for row in sw.rows():
 print(f"  {sw.n_points} points -> {sw.n_unique_runs} unique runs, "
       "each bit-identical to a standalone simulate() call")
 
+# -- 3b. speculative AGU: loss-of-decoupling kernels (DESIGN.md §10) ----------
+from repro.core import dae as daelib
+from repro.core import loopir as ir_mod
+from repro.core import programs as programs_mod
+
+sprog, sarrays, sparams = programs_mod.get("spmv_ldtrip").make(64)
+try:
+    simulator.simulate(sprog, sarrays, sparams, mode="FUS2")
+except daelib.LossOfDecoupling as e:
+    print("\n== speculative AGU (DESIGN.md §10) ==")
+    print(f"  speculation='off' rejects: {e}")
+sta = simulator.simulate(
+    sprog, sarrays, sparams, mode="STA", speculation="auto"
+)
+fus = simulator.simulate(
+    sprog, sarrays, sparams, mode="FUS2", speculation="auto", validate=True
+)
+oracle = ir_mod.interpret(sprog, sarrays, sparams)
+assert all(np.array_equal(fus.arrays[k], oracle[k]) for k in oracle)
+print(f"  speculation='auto': STA {sta.cycles} -> FUS2 {fus.cycles} cycles "
+      f"({sta.cycles / fus.cycles:.1f}x), {fus.squashed} squashed phantom "
+      "requests, arrays oracle-exact")
+
 # -- 4. TPU adaptation: wave partitioning + fused kernel ----------------------
 print("\n== TPU wave executor (Fig. 1c parallelism) ==")
 res = executor.execute(prog, arrays, params)

@@ -17,8 +17,13 @@ Decouples a loop forest into Processing Elements:
 
 Loss-of-decoupling (LoD): if an address or trip count depends on a
 *protected* load value (``LoadVal``), the AGU cannot run ahead. The
-paper resolves this with speculation from prior work [62]; none of the
-paper's benchmarks need it and we reject such programs explicitly.
+paper resolves this with speculation from prior work [62]. Under
+``decouple(speculation="off")`` (the default) such programs are
+rejected with a diagnostic naming the offending op/loop/local; under
+``speculation="auto"`` the PE is instead marked speculative
+(``DAEResult.spec``) and the AGU runs ahead with a last-value
+predictor, squashing mis-speculated epochs through the §6 valid-bit
+machinery (``core/speculate.py``, DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -33,6 +38,25 @@ from repro.core import loopir as ir
 
 class LossOfDecoupling(Exception):
     """Raised when an AGU would depend on a protected load value."""
+
+
+SPECULATION_MODES = ("off", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecInfo:
+    """Why one PE's AGU cannot run ahead without speculation.
+
+    Produced by ``decouple(speculation="auto")`` instead of raising
+    ``LossOfDecoupling``: ``loads`` are the protected load ops whose
+    values the AGU's address/trip closure consumes (each becomes a
+    last-value-predicted port of the speculative AGU, DESIGN.md §10);
+    ``reasons`` are the exact diagnostics ``speculation="off"`` raises.
+    """
+
+    pe_id: int
+    loads: tuple  # load op ids the AGU depends on, sorted
+    reasons: tuple  # one message per offending expression/local
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +143,9 @@ class DAEResult:
     op_to_pe: dict[str, int]
     # FIFO edges: (producer PE id, consumer PE id, local name, shared depth)
     fifo_edges: list[tuple[int, int, str, int]]
+    # PE id -> SpecInfo for PEs that need the speculative AGU (only
+    # populated under decouple(speculation="auto"); empty otherwise)
+    spec: dict[int, SpecInfo] = dataclasses.field(default_factory=dict)
 
     def shared_depth(self, op_a: str, op_b: str, program: ir.Program) -> int:
         """Number of common loops of the two ops' original nests."""
@@ -133,8 +160,18 @@ class DAEResult:
         return k
 
 
-def decouple(program: ir.Program) -> DAEResult:
-    """Run the decoupling pass over the program's loop forest."""
+def decouple(program: ir.Program, speculation: str = "off") -> DAEResult:
+    """Run the decoupling pass over the program's loop forest.
+
+    ``speculation`` selects the loss-of-decoupling policy: ``"off"``
+    raises ``LossOfDecoupling`` when an AGU's address/trip closure
+    touches a protected load value, ``"auto"`` marks the PE speculative
+    instead (``DAEResult.spec``) so the trace front-end can build the
+    speculative AGU (``core/speculate.py``).
+    """
+    assert speculation in SPECULATION_MODES, (
+        f"unknown speculation mode {speculation!r}"
+    )
     pes: list[PE] = []
     op_to_pe: dict[str, int] = {}
     # local name -> PE id that defines it (for FIFO edge construction)
@@ -223,12 +260,15 @@ def decouple(program: ir.Program) -> DAEResult:
 
     # ---- step 3: AGU/CU def-use split + DCE accounting + LoD check --------
 
+    spec: dict[int, SpecInfo] = {}
     for pe in pes:
-        agu, cu = _split_agu_cu(pe)
+        agu, cu, si = _split_agu_cu(pe, speculation)
         pe.agu_stmt_count = agu
         pe.cu_stmt_count = cu
+        if si is not None:
+            spec[pe.id] = si
 
-    return DAEResult(pes=pes, op_to_pe=op_to_pe, fifo_edges=fifo_edges)
+    return DAEResult(pes=pes, op_to_pe=op_to_pe, fifo_edges=fifo_edges, spec=spec)
 
 
 class CU:
@@ -260,16 +300,19 @@ class CU:
         def ev(e, scope, loadvals):
             return ir._eval(e, scope, self.arrays, self.params, loadvals)
 
-        def run_depth(d, scope):
+        def run_depth(d, scope, outer_loadvals):
+            # load values of enclosing iterations stay visible to inner
+            # trips/ivars/values (mirrors loopir.interpret's chaining —
+            # load-dependent trip counts need them, DESIGN.md §10)
             loop = pe.path[d - 1]
             loop_scope = ir._Env(scope)
             for iv in loop.ivars:
-                loop_scope.define(iv.name, ev(iv.init, scope, {}))
-            trip = int(ev(loop.trip, scope, {}))
+                loop_scope.define(iv.name, ev(iv.init, scope, outer_loadvals))
+            trip = int(ev(loop.trip, scope, outer_loadvals))
             for i in range(trip):
                 body = ir._Env(loop_scope)
                 body.define(loop.var, i)
-                loadvals: dict[str, float] = {}
+                loadvals: dict[str, float] = dict(outer_loadvals)
                 for s in by_depth.get(d, ()):
                     if isinstance(s, ir.Load):
                         v = yield ("need", s.id)
@@ -285,16 +328,16 @@ class CU:
                         if not body.set_existing(s.name, v):
                             body.define(s.name, v)
                 if d < pe.depth:
-                    yield from run_depth(d + 1, body)
+                    yield from run_depth(d + 1, body, loadvals)
                 for iv in loop.ivars:
                     cur = loop_scope.get(iv.name)
-                    step = ev(iv.step, body, {})
+                    step = ev(iv.step, body, outer_loadvals)
                     loop_scope.vals[iv.name] = (
                         cur + step if iv.op == "+" else cur * step
                     )
 
         if pe.depth >= 1:
-            yield from run_depth(1, ir._Env())
+            yield from run_depth(1, ir._Env(), {})
 
     def _advance(self, value: float = 0.0, prime: bool = False):
         try:
@@ -493,48 +536,67 @@ def _shared_depth_pe(a: PE, b: PE) -> int:
     return k
 
 
-def _split_agu_cu(pe: PE) -> tuple[int, int]:
+def _split_agu_cu(
+    pe: PE, speculation: str = "off"
+) -> tuple[int, int, Optional[SpecInfo]]:
     """Compute AGU/CU statement counts after the def-use split.
 
     AGU closure: everything feeding addresses, trip counts and ivar
     updates. If that closure touches a protected LoadVal, the AGU can no
-    longer run ahead (loss of decoupling) -> reject.
+    longer run ahead (loss of decoupling): under ``speculation="off"``
+    raise a diagnostic naming the consuming statement (op id, loop trip,
+    or ivar — mirroring ``TraceCompileError``'s offender-naming); under
+    ``"auto"`` collect the offending loads into a ``SpecInfo`` for the
+    speculative AGU. Returns ``(agu_count, cu_count, SpecInfo | None)``.
     """
-    # locals needed on the AGU side (transitively)
-    agu_exprs: list[ir.Expr] = []
+    # AGU-side expressions, each with the statement that owns it (the
+    # diagnostics below must name the consumer, not just the load)
+    agu_exprs: list[tuple[ir.Expr, str]] = []
     for lp in pe.path:
-        agu_exprs.append(lp.trip)
+        agu_exprs.append((lp.trip, f"trip of loop {lp.var!r}"))
         for iv in lp.ivars:
-            agu_exprs.extend([iv.init, iv.step])
+            agu_exprs.append((iv.init, f"init of ivar {iv.name!r}"))
+            agu_exprs.append((iv.step, f"step of ivar {iv.name!r}"))
     for s, _d in pe.stmts:
         if isinstance(s, (ir.Load, ir.Store)):
-            agu_exprs.append(s.addr)
+            agu_exprs.append((s.addr, f"address of op {s.id!r}"))
+
+    spec_loads: set[str] = set()
+    spec_reasons: list[str] = []
+
+    def offend(what: str, lds: set) -> None:
+        # collect even under "off": whether the auto hint is honest
+        # depends on the *whole* closure (cross-PE loads re-reject)
+        spec_loads.update(lds)
+        spec_reasons.append(
+            f"PE {pe.id}: {what} depends on protected load(s) "
+            f"{sorted(lds)} — loss of decoupling "
+            f'(speculation="auto" runs this AGU speculatively)'
+        )
 
     needed_locals: set[str] = set()
-    frontier = set()
-    for e in agu_exprs:
+    frontier: list[tuple[str, str]] = []  # (local name, consuming stmt)
+    for e, what in agu_exprs:
         ls, lds = expr_deps(e)
         if lds:
-            raise LossOfDecoupling(
-                f"PE {pe.id}: address/trip depends on protected load(s) {sorted(lds)}"
-            )
-        frontier |= ls
+            offend(what, lds)
+        frontier.extend((name, what) for name in sorted(ls))
     # transitive closure over SetLocal defs within the PE
     setlocals = {
         s.name: s for s, _d in pe.stmts if isinstance(s, ir.SetLocal)
     }
     while frontier:
-        name = frontier.pop()
+        name, what = frontier.pop()
         if name in needed_locals:
             continue
         needed_locals.add(name)
         if name in setlocals:
             ls, lds = expr_deps(setlocals[name].value)
             if lds:
-                raise LossOfDecoupling(
-                    f"PE {pe.id}: AGU local {name!r} depends on load(s) {sorted(lds)}"
-                )
-            frontier |= ls - needed_locals
+                offend(f"AGU local {name!r} (SetLocal feeding {what})", lds)
+            frontier.extend(
+                (n, what) for n in sorted(ls - needed_locals)
+            )
 
     agu_count = 0
     cu_count = 0
@@ -548,4 +610,24 @@ def _split_agu_cu(pe: PE) -> tuple[int, int]:
             # value-side locals always stay in the CU (DCE removes them
             # from the AGU unless address-feeding)
             cu_count += 1
-    return agu_count, cu_count
+
+    spec: Optional[SpecInfo] = None
+    if spec_loads:
+        foreign = sorted(spec_loads - set(pe.mem_ops))
+        if foreign:
+            # the predicted port must live in this PE: its delivery
+            # stream is what resolves mis-speculated epochs — raised in
+            # BOTH modes, so "off" never promises an auto that would
+            # just re-reject
+            raise LossOfDecoupling(
+                f"PE {pe.id}: AGU depends on load(s) {foreign} of another "
+                f"PE — cross-PE speculation is not supported"
+            )
+        if speculation == "off":
+            raise LossOfDecoupling(spec_reasons[0])
+        spec = SpecInfo(
+            pe_id=pe.id,
+            loads=tuple(sorted(spec_loads)),
+            reasons=tuple(spec_reasons),
+        )
+    return agu_count, cu_count, spec

@@ -161,7 +161,7 @@ class EventEngine:
     """LSQ / FUS1 / FUS2 execution with vectorized waves (module doc)."""
 
     def __init__(self, comp, traces, arrays, params, mode, p,
-                 oracle_loads: Optional[dict] = None, shared=None):
+                 oracle_loads: Optional[dict] = None, shared=None, spec=None):
         self.comp = comp
         self.traces = traces
         self.mode = mode
@@ -214,6 +214,19 @@ class EventEngine:
             self.inst_rank = ranks
             self.inst_outstanding = counts.copy()
             self.inst_window = 0
+
+        # speculative AGU plan (speculate.SpecPlan, DESIGN.md §10):
+        # per-request epoch gates + squash traffic
+        self.spec = spec
+        if spec is not None:
+            self.gate_time = np.full(
+                max(spec.n_gates, 1), SENTINEL, dtype=np.int64
+            )
+            # gid -> ports with requests gated on it (wave wakeups)
+            self.gate_ports: dict[int, set] = {}
+            for op_id, g in spec.gates.items():
+                for gid in np.unique(g[g >= 0]):
+                    self.gate_ports.setdefault(int(gid), set()).add(op_id)
 
         self.open_bursts: dict[str, _OpenBurst] = {}
         self.channel_free_at = 0
@@ -330,6 +343,25 @@ class EventEngine:
                 m, capped = m2, False  # window-gated: woken on advance
             if m <= 0:
                 return False
+
+        # speculative AGU: cut the wave at the first unresolved epoch
+        # gate (ids are non-decreasing along every stream). Fired gates
+        # need no cycle lower bound: a gate's fire time is the event
+        # timestamp it was processed at, so any later wave has
+        # start >= now >= gate_time already.
+        if self.spec is not None:
+            g = self.spec.gates.get(op_id)
+            if g is not None:
+                gs = g[n0 : n0 + m]
+                if len(gs) and gs[-1] >= 0:
+                    unfired = (gs >= 0) & (
+                        self.gate_time[np.maximum(gs, 0)] >= SENTINEL
+                    )
+                    if unfired.any():
+                        m2 = int(np.argmax(unfired))
+                        m, capped = m2, False  # woken by spec_fire
+                        if m <= 0:
+                            return False
 
         if port.is_store:
             # §5.5: a store issues only together with its value
@@ -627,8 +659,27 @@ class EventEngine:
             self.ack_dirty.add(payload)
         elif kind == "retry":
             self.dirty.add(payload)
+        elif kind == "spec_fire":
+            self._fire_gate(payload)
         else:  # pragma: no cover
             raise ValueError(kind)
+
+    def _fire_gate(self, gid: int):
+        """Squash of epoch ``gid`` completes: open the gate, wake the
+        gated ports, and release the phantom traffic through the shared
+        accounting (``speculate.fire_phantoms`` — one body for both
+        engines keeps their counters bit-identical; phantoms never
+        touch hazard-visible port state, DESIGN.md §10)."""
+        if self.gate_time[gid] <= self.now:
+            return
+        self.gate_time[gid] = self.now
+        self.dirty.update(self.gate_ports.get(gid, ()))
+        from repro.core import speculate as speclib
+
+        self.channel_free_at = speclib.fire_phantoms(
+            self.spec, gid, self.now, self.channel_free_at,
+            self.burst_size, self.p.channel_occupancy, self.result,
+        )
 
     # -- ACK frontier -----------------------------------------------------
 
@@ -661,6 +712,18 @@ class EventEngine:
                 self._validate_loads(port, popped)
             self.ready_loads[port.op_id].extend(popped.tolist())
             self.deliver_dirty.add(port.pe_id)
+            if self.spec is not None:
+                # mispredicted value delivered: squash completes (and
+                # the corrected epoch opens) squash_latency later
+                rv = self.spec.resolve_of.get(port.op_id)
+                if rv is not None:
+                    sel = popped[popped < len(rv)]
+                    for gid in rv[sel]:
+                        if gid >= 0:
+                            self._post(
+                                self.now + self.p.squash_latency,
+                                "spec_fire", int(gid),
+                            )
         if self.sequential:
             r = self.inst_rank[port.op_id][popped]
             np.subtract.at(self.inst_outstanding, r, 1)

@@ -82,18 +82,22 @@ def _trace_stream(
     arrays: dict[str, np.ndarray],
     params: dict[str, int],
     trace_mode: str,
+    oracle_loads=None,
 ) -> tuple[list[str], list[int], list[bool]]:
     """Program-order (op id, address, is_store) stream from AGU traces.
 
     Global program order is lexicographic on the polyhedral 2d+1 key —
     static body positions and the §4 never-reset counters interleaved,
     with the op's own body position last. Supplies everything except
-    values/valid bits, which only the oracle walk can produce.
+    values/valid bits, which only the oracle walk can produce
+    (``oracle_loads`` feeds the speculative AGU of loss-of-decoupling
+    PEs from that same walk).
     """
     from repro.core import schedule as schedlib
 
     traces = schedlib.trace_program(
-        program, dae, arrays, params, mode=trace_mode
+        program, dae, arrays, params, mode=trace_mode,
+        oracle_loads=oracle_loads,
     )
     loop_pos, op_pos = program.static_positions()
     op_path = {op.id: path for op, path in program.mem_ops()}
@@ -132,30 +136,52 @@ def execute(
     arrays: dict[str, np.ndarray],
     params: Optional[dict[str, int]] = None,
     trace_mode: str = "auto",
+    speculation: str = "off",
 ) -> ExecResult:
     """Wave-partitioned fused execution, validated against the oracle by
     construction: effects are applied in oracle order inside each wave,
-    and conflicting requests never share a wave."""
+    and conflicting requests never share a wave.
+
+    ``speculation="auto"`` admits loss-of-decoupling programs
+    (load-dependent trips/addresses, DESIGN.md §10): the wave partition
+    works off the *true* post-squash request stream — phantom squash
+    traffic is a DU-timing artifact and has no wave-executor analogue.
+    """
     params = params or {}
 
     from repro.core import dae as daelib
 
-    dae = daelib.decouple(program)
+    dae = daelib.decouple(program, speculation=speculation)
     op_pe = dae.op_to_pe
+
+    def interpret_hooked(hook):
+        if dae.spec:
+            # speculative programs get the documented auto-reject
+            # (DESIGN.md §10) through the shared conversion site
+            from repro.core import speculate
+
+            speculate.interpret_hooked(program, arrays, params, hook)
+        else:
+            ir.interpret(program, arrays, params, trace_hook=hook)
 
     # --- pass 1: program-order request stream ----------------------------
     # op/addr/kind from the trace compiler (trace_mode != "interp");
     # value/valid always from the oracle walk — values are execution.
     if trace_mode != "interp":
-        req_op, req_addr, req_store = _trace_stream(
-            program, dae, arrays, params, trace_mode
-        )
         per_op_vv: dict[str, list[tuple[bool, Optional[float]]]] = {}
+        load_streams: dict[str, list[float]] = {}
 
         def hook(op_id, addr, is_store, valid, value):
             per_op_vv.setdefault(op_id, []).append((valid, value))
+            if not is_store and dae.spec:
+                # only the speculative AGU consumes the load streams
+                load_streams.setdefault(op_id, []).append(value)
 
-        ir.interpret(program, arrays, params, trace_hook=hook)
+        interpret_hooked(hook)
+        req_op, req_addr, req_store = _trace_stream(
+            program, dae, arrays, params, trace_mode,
+            oracle_loads=load_streams if dae.spec else None,
+        )
         n_oracle = sum(len(v) for v in per_op_vv.values())
         assert n_oracle == len(req_op), (
             f"trace stream has {len(req_op)} requests, oracle walk "
@@ -181,7 +207,7 @@ def execute(
             req_valid.append(valid)
             req_value.append(value)
 
-        ir.interpret(program, arrays, params, trace_hook=hook)
+        interpret_hooked(hook)
 
     n = len(req_op)
 

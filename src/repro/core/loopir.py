@@ -390,6 +390,14 @@ class Program:
 # ---------------------------------------------------------------------------
 
 
+class UnavailableLoadValue(KeyError):
+    """A ``LoadVal`` consumed before its ``Load`` produced a value —
+    e.g. a trip reading a load of the loop it bounds. Distinguished
+    from other ``KeyError``s (typo'd arrays/params) so the speculative
+    AGU (``core/speculate.py``) converts only genuine
+    use-before-availability into its auto-reject diagnostic."""
+
+
 class _Env:
     """Chained mutable scopes for loop vars / ivars / locals."""
 
@@ -429,7 +437,10 @@ def _eval(e: Expr, env: _Env, arrays, params, loadvals) -> float:
         idx = int(_eval(e.index, env, arrays, params, loadvals))
         return arrays[e.array][idx]
     if isinstance(e, LoadVal):
-        return loadvals[e.load_id]
+        try:
+            return loadvals[e.load_id]
+        except KeyError:
+            raise UnavailableLoadValue(e.load_id) from None
     if isinstance(e, Bin):
         return _binop(
             e.op,
@@ -457,12 +468,20 @@ def interpret(
     every memory operation *in program order*, including mis-speculated
     stores (guard false -> valid=False, value=None) — the request exists
     in the decoupled machine even when the effect doesn't (§6).
+
+    Load values are visible downstream of their ``Load`` within the
+    enclosing body *and* inside nested loops of that body — including
+    loop trip counts and ivar updates. Load-dependent trips (the §6
+    speculation workloads, ``core/speculate.py``) are therefore plain
+    programs to the oracle; only the decoupled machine needs the
+    speculative AGU to run them.
     """
     params = params or {}
     arrays = {k: np.array(v, copy=True) for k, v in arrays.items()}
 
-    def run_body(stmts: Sequence[Stmt], env: _Env):
-        loadvals: dict[str, float] = {}
+    def run_body(stmts: Sequence[Stmt], env: _Env, outer_loadvals):
+        # chained visibility: loads of enclosing iterations stay readable
+        loadvals: dict[str, float] = dict(outer_loadvals)
         for s in stmts:
             if isinstance(s, Load):
                 a = int(_eval(s.addr, env, arrays, params, loadvals))
@@ -487,26 +506,26 @@ def interpret(
                 if not env.set_existing(s.name, v):
                     env.define(s.name, v)
             elif isinstance(s, Loop):
-                run_loop(s, env)
+                run_loop(s, env, loadvals)
             else:
                 raise TypeError(f"unknown stmt {s!r}")
 
-    def run_loop(loop: Loop, env: _Env):
+    def run_loop(loop: Loop, env: _Env, loadvals):
         outer = _Env(env)
         for iv in loop.ivars:
-            outer.define(iv.name, _eval(iv.init, env, arrays, params, {}))
-        trip = int(_eval(loop.trip, env, arrays, params, {}))
+            outer.define(iv.name, _eval(iv.init, env, arrays, params, loadvals))
+        trip = int(_eval(loop.trip, env, arrays, params, loadvals))
         for i in range(trip):
             inner = _Env(outer)
             inner.define(loop.var, i)
-            run_body(loop.body, inner)
+            run_body(loop.body, inner, loadvals)
             for iv in loop.ivars:
                 cur = outer.get(iv.name)
-                step = _eval(iv.step, inner, arrays, params, {})
+                step = _eval(iv.step, inner, arrays, params, loadvals)
                 outer.vals[iv.name] = cur + step if iv.op == "+" else cur * step
         return
 
     top = _Env()
     for lp in program.loops:
-        run_loop(lp, top)
+        run_loop(lp, top, {})
     return arrays

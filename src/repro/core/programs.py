@@ -58,14 +58,18 @@ class Bench:
     make: Callable[[int], tuple[Program, dict[str, np.ndarray], dict[str, int]]]
     complexity: str
     default_scale: int
+    # True for kernels whose AGU depends on protected load values: they
+    # run only under simulate(speculation="auto") (DESIGN.md §10); the
+    # DSE result identity folds the speculation axis for the rest
+    speculative: bool = False
 
 
 REGISTRY: dict[str, Bench] = {}
 
 
-def _register(name, complexity, default_scale):
+def _register(name, complexity, default_scale, speculative=False):
     def deco(fn):
-        REGISTRY[name] = Bench(name, fn, complexity, default_scale)
+        REGISTRY[name] = Bench(name, fn, complexity, default_scale, speculative)
         return fn
 
     return deco
@@ -500,6 +504,146 @@ def tanh_spmv(scale: int):
     return prog, arrays, {"n": n, "nnz": nnz}
 
 
+# ---------------------------------------------------------------------------
+# loss-of-decoupling kernels (speculation="auto" only, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@_register("spmv_ldtrip", "O(nnz)", 128, speculative=True)
+def spmv_ldtrip(scale: int):
+    """SpMV whose row lengths are *computed* by a sibling loop and read
+    back through a protected load — the inner trip count depends on
+    ``LoadVal``, so ``dae.decouple`` loses decoupling and only the
+    speculative AGU can fuse the two loops. Row lengths are mostly
+    uniform, so the last-value predictor runs ahead across rows."""
+    rows = scale
+    rng = np.random.default_rng(9)
+    base_len = 4
+    deg = np.full(rows, base_len, dtype=np.int64)
+    # ~1/8 of rows deviate: real mispredictions + squash traffic, but
+    # enough regularity that run-ahead wins
+    odd = rng.random(rows) < 0.125
+    deg[odd] = rng.integers(0, 2 * base_len + 1, size=int(odd.sum()))
+    rp = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
+    nnz = int(rp[-1])
+    cidx = rng.integers(0, rows, size=nnz).astype(np.int64)
+
+    prog = Program(
+        name="spmv_ldtrip",
+        loops=(
+            # producer: publish the (runtime-computed) row lengths
+            Loop("i", Param("rows", 0, rows), (
+                Store("st_len", "rowlen", V("i"), R("deg", V("i"))),
+            )),
+            # consumer: SpMV whose trip loads what the producer stored
+            Loop("i2", Param("rows", 0, rows), (
+                Load("ld_len", "rowlen", V("i2")),
+                Store("st_z", "y", V("i2"), Const(0.0)),
+                Loop("k", LoadVal("ld_len"), (
+                    Load("ld_x", "x", R("cidx", R("rp", V("i2")) + V("k"))),
+                    Load("ld_y", "y", V("i2")),
+                    Store(
+                        "st_y", "y", V("i2"),
+                        LoadVal("ld_y")
+                        + R("val", R("rp", V("i2")) + V("k")) * LoadVal("ld_x"),
+                    ),
+                )),
+            )),
+        ),
+        params=("rows",),
+    )
+    arrays = {
+        "rowlen": np.zeros(rows, dtype=np.float64),
+        "deg": deg.astype(np.float64),
+        "x": rng.standard_normal(rows),
+        "y": np.zeros(rows, dtype=np.float64),
+        "rp": rp, "cidx": cidx, "val": rng.standard_normal(max(nnz, 1)),
+    }
+    return prog, arrays, {"rows": rows}
+
+
+@_register("bfs_front", "O(nodes)", 256, speculative=True)
+def bfs_front(scale: int):
+    """Front-driven BFS-style frontier gather: per-level frontier
+    offsets are published by a producer loop and loaded back — both the
+    level trip count (``hi - lo``) and the frontier addresses
+    (``lo + k``) depend on protected load values. Trip/address
+    speculation squashes once per level and streams within it."""
+    nodes = scale
+    levels = 8
+    rng = np.random.default_rng(10)
+    # random partition of the nodes into level frontiers
+    cuts = np.sort(rng.choice(nodes, size=levels - 1, replace=False))
+    off0 = np.concatenate([[0], cuts, [nodes]]).astype(np.int64)
+    front = rng.permutation(nodes).astype(np.int64)
+
+    prog = Program(
+        name="bfs_front",
+        loops=(
+            Loop("t", Param("levels1", 0, levels + 1), (
+                Store("st_off", "foff", V("t"), R("off0", V("t"))),
+            )),
+            Loop("t2", Param("levels", 0, levels), (
+                Load("ld_lo", "foff", V("t2")),
+                Load("ld_hi", "foff", V("t2") + 1),
+                Loop("k", LoadVal("ld_hi") - LoadVal("ld_lo"), (
+                    Load("ld_n", "front", LoadVal("ld_lo") + V("k")),
+                    Store(
+                        "st_v", "visit",
+                        LoadVal("ld_lo") + V("k"),
+                        R("nodeval", LoadVal("ld_n")) + 1.0,
+                    ),
+                )),
+            )),
+        ),
+        params=("levels", "levels1"),
+    )
+    arrays = {
+        "foff": np.zeros(levels + 1, dtype=np.float64),
+        "off0": off0,
+        "front": front.astype(np.float64),
+        "visit": np.zeros(nodes, dtype=np.float64),
+        "nodeval": rng.standard_normal(nodes),
+    }
+    return prog, arrays, {"levels": levels, "levels1": levels + 1}
+
+
+@_register("chase_sum", "O(n)", 256, speculative=True)
+def chase_sum(scale: int):
+    """Linked-list pointer chase: the next address round-trips through
+    an AGU local fed by the loaded value — the worst case for the
+    last-value predictor (every occurrence mispredicts), degrading to
+    delivery-gated sequential issue. Correctness showcase, not a
+    speedup one (DESIGN.md §10)."""
+    n = scale
+    rng = np.random.default_rng(11)
+    nxt = rng.permutation(n).astype(np.int64)
+
+    prog = Program(
+        name="chase_sum",
+        loops=(
+            Loop("o", Const(1), (
+                SetLocal("cur", Const(0)),
+                Loop("i", Param("n", 0, n), (
+                    Load("ld_nxt", "nxt", Local("cur")),
+                    SetLocal("cur", LoadVal("ld_nxt")),
+                    Store(
+                        "st_o", "out", V("i"),
+                        R("w", LoadVal("ld_nxt")) + LoadVal("ld_nxt"),
+                    ),
+                )),
+            )),
+        ),
+        params=("n",),
+    )
+    arrays = {
+        "nxt": nxt.astype(np.float64),
+        "out": np.zeros(n, dtype=np.float64),
+        "w": rng.standard_normal(n),
+    }
+    return prog, arrays, {"n": n}
+
+
 def get(name: str) -> Bench:
     return REGISTRY[name]
 
@@ -508,6 +652,25 @@ def all_names() -> list[str]:
     return list(REGISTRY)
 
 
-# the nine Table-1 kernels, in the paper's order (the registry above is
-# populated in exactly this order; the tuple is the stable public name)
-TABLE1: tuple[str, ...] = tuple(REGISTRY)
+# The nine Table-1 kernels, in the paper's order. Frozen as an explicit
+# list (NOT tuple(REGISTRY)): registering new kernels — e.g. the
+# speculative ones above — must never silently grow the paper's
+# evaluation set (benchmarks/paper_table1.py, test_engine_diff, nightly
+# benchmarks). tests/test_speculation.py guards REGISTRY ⊇ TABLE1.
+TABLE1: tuple[str, ...] = (
+    "RAWloop",
+    "WARloop",
+    "WAWloop",
+    "bnn",
+    "pagerank",
+    "fft",
+    "matpower",
+    "hist+add",
+    "tanh+spmv",
+)
+
+# the loss-of-decoupling kernels, in registration order (the
+# speculation benchmark set: benchmarks/bench_speculation.py)
+SPEC_KERNELS: tuple[str, ...] = tuple(
+    name for name, b in REGISTRY.items() if b.speculative
+)

@@ -145,17 +145,60 @@ def trace_program(
     params: Optional[dict[str, int]] = None,
     mode: str = "auto",
     report: Optional[dict] = None,
+    spec_out: Optional[list] = None,
+    oracle_loads: Optional[dict] = None,
 ) -> dict[str, OpTrace]:
     """Generate the AGU request streams of every memory op in every PE.
 
     ``mode`` selects the per-PE trace path (module docstring); pass a
     dict as ``report`` to receive, per PE id, ``{"path": "compiled" |
-    "interp", "reason": None | str, "op_affine": {...}}``.
+    "interp" | "speculative", "reason": None | str, "op_affine": {...}}``.
+
+    PEs marked speculative by ``dae.decouple(speculation="auto")`` are
+    routed to the speculative AGU (``speculate.trace_spec_pe``) under
+    ``"auto"``/``"interp"`` — its run-ahead is inherently interpretive,
+    so ``"compiled"`` raises ``TraceCompileError`` for them. Pass a list
+    as ``spec_out`` to receive the accumulated ``speculate.SpecPlan``
+    (appended once; ``None`` when no PE speculates) — the engines
+    consume it for epoch gating and squash traffic (DESIGN.md §10).
+    ``oracle_loads`` optionally supplies the per-op oracle load streams
+    the speculative AGU predicts against (callers that already ran a
+    hooked ``loopir.interpret`` — validation, the DSE planner, the wave
+    executor — pass theirs to avoid a second sequential walk); when
+    absent and a PE speculates, one hooked run happens here.
     """
     assert mode in TRACE_MODES, f"unknown trace mode {mode!r}"
     params = params or {}
     out: dict[str, OpTrace] = {}
+    spec_plan = None
     for pe in dae.pes:
+        if pe.id in dae.spec:
+            if mode == "compiled":
+                raise TraceCompileError(
+                    f"PE {pe.id} needs the speculative AGU (loss of "
+                    f"decoupling: {'; '.join(dae.spec[pe.id].reasons)}) — "
+                    f"speculative streams are interpreter-built; use "
+                    f"trace_mode='auto'"
+                )
+            from repro.core import speculate
+
+            if spec_plan is None:
+                spec_plan = speculate.SpecPlan()
+                if oracle_loads is None:
+                    oracle_loads = speculate.oracle_load_streams(
+                        program, arrays, params
+                    )
+            t = speculate.trace_spec_pe(
+                pe, dae.spec[pe.id], arrays, params, oracle_loads, spec_plan
+            )
+            if report is not None:
+                report[pe.id] = {
+                    "path": "speculative",
+                    "reason": "; ".join(dae.spec[pe.id].reasons),
+                    "op_affine": {},
+                }
+            out.update(t.ops)
+            continue
         path, reason, cls = "interp", None, None
         if mode != "interp":
             cls = affine.classify_pe(pe)
@@ -183,6 +226,8 @@ def trace_program(
                 "op_affine": dict(cls.op_affine) if cls is not None else {},
             }
         out.update(t.ops)
+    if spec_out is not None:
+        spec_out.append(spec_plan)
     return out
 
 

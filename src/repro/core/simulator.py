@@ -60,6 +60,10 @@ class SimParams:
     channel_occupancy: int = 2  # cycles a burst holds the channel
     cu_latency: int = 8  # load value -> dependent store value
     forward_latency: int = 1
+    # speculative AGU (§6 / DESIGN.md §10): cycles from a mispredicted
+    # load's value delivery to the squash completing and the corrected
+    # epoch becoming issuable
+    squash_latency: int = 4
     # static II for loops with potential memory dependencies: a static
     # pipeline cannot disambiguate, so the loop is scheduled at the DRAM
     # round-trip dependence distance (load -> compute -> store visible).
@@ -77,8 +81,11 @@ class SimResult:
     ``cycles`` is the simulated completion time under the DU timing
     model; ``arrays`` the final protected-memory state (always equal to
     the sequential oracle — that equality is what validates the hazard
-    logic); ``dram_bursts``/``dram_requests`` the DRAM traffic and
-    ``forwards`` the §5.5 store-to-load forwarding hit count (FUS2).
+    logic); ``dram_bursts``/``dram_requests`` the DRAM traffic,
+    ``forwards`` the §5.5 store-to-load forwarding hit count (FUS2),
+    and ``squashed`` the speculative AGU's squashed phantom request
+    count (0 unless the program runs with ``speculation="auto"``,
+    DESIGN.md §10; phantom loads are included in the DRAM counters).
     """
 
     cycles: int
@@ -87,6 +94,7 @@ class SimResult:
     dram_bursts: int = 0
     dram_requests: int = 0
     forwards: int = 0
+    squashed: int = 0
 
 
 @dataclasses.dataclass
@@ -131,14 +139,24 @@ class Compiled:
     demands the vectorized path (raising ``schedule.TraceCompileError``
     otherwise), ``"interp"`` forces the reference interpreter. The
     engines consult it when constructing CUs (``dae.make_cu``).
+
+    ``speculation`` selects the loss-of-decoupling policy (DESIGN.md
+    §10): ``"off"`` rejects AGUs that depend on protected loads,
+    ``"auto"`` marks them speculative so the trace front-end builds a
+    run-ahead AGU with epoch squash.
     """
 
     def __init__(
-        self, program: ir.Program, forwarding: bool, trace_mode: str = "auto"
+        self,
+        program: ir.Program,
+        forwarding: bool,
+        trace_mode: str = "auto",
+        speculation: str = "off",
     ):
         self.program = program
         self.trace_mode = trace_mode
-        self.dae = daelib.decouple(program)
+        self.speculation = speculation
+        self.dae = daelib.decouple(program, speculation=speculation)
         if self.dae.fifo_edges:
             raise NotImplementedError(
                 "cross-PE scalar FIFOs are not modelled; communicate "
@@ -154,6 +172,12 @@ class Compiled:
         self.all_pairs = self.plan.pairs + [p for p, _ in self.plan.pruned]
 
     def pe_has_mem_dep(self, pe_id: int) -> bool:
+        # a speculative PE's AGU consumes load values (loss of
+        # decoupling): to a static scheduler that IS a loop-carried
+        # memory dependence — the recurrence must run at the
+        # load-round-trip II even without an aliasing pair
+        if pe_id in self.dae.spec:
+            return True
         return any(
             p.same_pe and self.dae.op_to_pe[p.dst] == pe_id
             for p in self.all_pairs
@@ -319,11 +343,20 @@ class Engine:
         mode: str,
         p: SimParams,
         shared: Optional[SharedArtifacts] = None,
+        spec=None,
     ):
         self.comp = comp
         self.traces = traces
         self.mode = mode
         self.p = p
+        # speculative AGU plan (speculate.SpecPlan): per-request epoch
+        # gates + squash traffic; None for non-speculative programs
+        self.spec = spec
+        if spec is not None:
+            self.gate_time = np.full(
+                max(spec.n_gates, 1), 2**62, dtype=np.int64
+            )
+            self.pending_fires = 0
         self.forwarding = mode == "FUS2"
         self.sequential = mode == "LSQ"
         self.burst_size = 1 if mode == "LSQ" else p.burst_size
@@ -421,6 +454,8 @@ class Engine:
             all(p.exhausted and not p.pending for p in self.ports.values())
             and all(cu.done for cu in self.cus.values())
             and not self.open_bursts
+            # pending squash events still carry phantom DRAM accounting
+            and not (self.spec is not None and self.pending_fires)
         )
 
     def _deadlock(self):
@@ -464,6 +499,14 @@ class Engine:
         idx = port.next
         if self.sequential and self.req_inst[(op_id, idx)] > self.inst_window:
             return False
+        if self.spec is not None:
+            # epoch gate: a request of a squashed epoch re-issues only
+            # once its trigger value delivered + squash completed
+            g = self.spec.gates.get(op_id)
+            if g is not None and idx < len(g):
+                gid = int(g[idx])
+                if gid >= 0 and self.gate_time[gid] > self.now:
+                    return False
         # stores: the request is sent together with its value (§5.5: a
         # store moves to the pending buffer only with its value)
         value = valid = None
@@ -618,8 +661,25 @@ class Engine:
             self.store_values.setdefault(op_id, []).append(
                 (self.now, value, valid)
             )
+        elif kind == "spec_fire":
+            self.pending_fires -= 1
+            self._fire_gate(payload)
         else:  # pragma: no cover
             raise ValueError(kind)
+
+    def _fire_gate(self, gid: int):
+        """Squash of epoch ``gid`` completes: open the gate and release
+        the phantom traffic (``speculate.fire_phantoms``; phantoms never
+        touch the hazard-visible port state, DESIGN.md §10)."""
+        if self.gate_time[gid] <= self.now:
+            return
+        self.gate_time[gid] = self.now
+        from repro.core import speculate as speclib
+
+        self.channel_free_at = speclib.fire_phantoms(
+            self.spec, gid, self.now, self.channel_free_at,
+            self.burst_size, self.p.channel_occupancy, self.result,
+        )
 
     def _ack_prefix(self, port: dulib.Port):
         if (
@@ -663,6 +723,21 @@ class Engine:
                 self.inst_outstanding[r] -= 1
             if not port.is_store:
                 self.ready_loads.setdefault(port.op_id, []).append(e)
+                if self.spec is not None:
+                    # delivery of a mispredicted value: squash completes
+                    # (and the corrected epoch opens) squash_latency later
+                    rv = self.spec.resolve_of.get(port.op_id)
+                    if (
+                        rv is not None
+                        and e.req_idx < len(rv)
+                        and rv[e.req_idx] >= 0
+                    ):
+                        self.pending_fires += 1
+                        self._post(
+                            self.now + self.p.squash_latency,
+                            "spec_fire",
+                            int(rv[e.req_idx]),
+                        )
 
     def _deliver(self, port: dulib.Port) -> bool:
         ready = self.ready_loads.get(port.op_id)
@@ -708,6 +783,7 @@ def simulate(
     validate: bool = False,
     engine: str = "event",
     trace_mode: str = "auto",
+    speculation: str = "off",
 ) -> SimResult:
     """Simulate ``program`` under one of the four evaluated systems.
 
@@ -729,19 +805,38 @@ def simulate(
     ``"compiled"`` | ``"interp"``, see ``schedule.trace_program``); both
     engines consume the same streams, so results are identical across
     trace modes — ``"compiled"`` just builds them closed-form.
+
+    ``speculation`` selects the loss-of-decoupling policy (DESIGN.md
+    §10): ``"off"`` (default) raises ``dae.LossOfDecoupling`` when an
+    AGU depends on a protected load value; ``"auto"`` builds a
+    speculative run-ahead AGU instead — last-value prediction, epoch
+    tagging, rollback-free squash through the §6 valid-bit path — and
+    opens load-dependent-trip/address kernels. Final arrays stay
+    bit-identical to the sequential oracle either way.
     """
     assert mode in ("STA", "LSQ", "FUS1", "FUS2"), f"unknown mode {mode!r}"
     assert engine in ("cycle", "event"), f"unknown engine {engine!r}"
     assert trace_mode in schedlib.TRACE_MODES, f"unknown trace mode {trace_mode!r}"
     params = params or {}
     p = sim or SimParams()
-    comp = Compiled(program, forwarding=(mode == "FUS2"), trace_mode=trace_mode)
+    comp = Compiled(
+        program, forwarding=(mode == "FUS2"), trace_mode=trace_mode,
+        speculation=speculation,
+    )
+    spec_out: list = []
+    oracle_loads: Optional[dict[str, list[float]]] = None
+    if comp.dae.spec:
+        # the speculative AGU predicts against the oracle's load
+        # streams; compute them once and share with validation below
+        from repro.core import speculate
+
+        oracle_loads = speculate.oracle_load_streams(program, arrays, params)
     traces = schedlib.trace_program(
-        program, comp.dae, arrays, params, mode=trace_mode
+        program, comp.dae, arrays, params, mode=trace_mode,
+        spec_out=spec_out, oracle_loads=oracle_loads,
     )
 
-    oracle_loads: Optional[dict[str, list[float]]] = None
-    if validate and mode != "STA":
+    if validate and mode != "STA" and oracle_loads is None:
         oracle_loads = {}
 
         def hook(op_id, addr, is_store, valid, value):
@@ -752,7 +847,8 @@ def simulate(
 
     return simulate_traced(
         comp, traces, arrays, params, mode=mode, sim=p, engine=engine,
-        oracle_loads=oracle_loads,
+        oracle_loads=oracle_loads if (validate and mode != "STA") else None,
+        spec_plan=spec_out[0] if spec_out else None,
     )
 
 
@@ -766,6 +862,7 @@ def simulate_traced(
     engine: str = "event",
     oracle_loads: Optional[dict] = None,
     shared: Optional[SharedArtifacts] = None,
+    spec_plan=None,
 ) -> SimResult:
     """Simulate from an already-compiled front-end.
 
@@ -779,21 +876,30 @@ def simulate_traced(
 
     ``oracle_loads`` (op id -> in-order load value list/array) enables
     per-request validation against the sequential oracle, as
-    ``simulate(validate=True)`` does.
+    ``simulate(validate=True)`` does. ``spec_plan`` is the
+    ``speculate.SpecPlan`` the trace front-end produced for speculative
+    programs (``trace_program(spec_out=...)``) — required whenever the
+    compiled DAE has speculative PEs, ignored otherwise.
     """
     p = sim or SimParams()
     if mode == "STA":
         return _simulate_sta(comp, traces, arrays, params, p, shared=shared)
+    assert not (comp.dae.spec and spec_plan is None), (
+        "speculative program simulated without its SpecPlan — pass "
+        "trace_program(spec_out=...)'s plan through spec_plan"
+    )
 
     if engine == "event":
         from repro.core import engine_event
 
         ev = engine_event.EventEngine(
             comp, traces, arrays, params, mode, p,
-            oracle_loads=oracle_loads, shared=shared,
+            oracle_loads=oracle_loads, shared=shared, spec=spec_plan,
         )
         return ev.run()
-    eng = Engine(comp, traces, arrays, params, mode, p, shared=shared)
+    eng = Engine(
+        comp, traces, arrays, params, mode, p, shared=shared, spec=spec_plan
+    )
     if oracle_loads is not None:
         eng.oracle_loads = {k: list(v) for k, v in oracle_loads.items()}
     return eng.run()

@@ -1,0 +1,389 @@
+"""Speculative AGU with rollback-free squash (DESIGN.md §10).
+
+``dae.decouple(speculation="off")`` rejects programs whose AGU
+address/trip closure consumes a protected load value (loss of
+decoupling): the AGU cannot run ahead of the load round trip. The
+paper's lineage (speculation in dynamically scheduled HLS, [62])
+resolves this by letting the AGU *predict* the value, run ahead, and
+squash on mis-speculation — requests are never retracted, they stay in
+flight tagged invalid, exactly the §6 valid-bit machinery the decoupled
+machine already has for guarded stores.
+
+This module builds that behaviour as a trace-level plan:
+
+  * **Predictor.** Each AGU-feeding load port gets a last-value
+    predictor: the predicted value of occurrence ``k`` is the true
+    value of occurrence ``k-1`` (0.0 before the first). Load-dependent
+    trip counts with repetitive structure (CSR row lengths, frontier
+    sizes) predict well; pointer chases predict poorly and degrade to
+    delivery-gated issue — correct either way.
+  * **Epochs.** Requests the AGU emits are tagged with the current
+    *epoch* — the id of the most recent misprediction preceding them in
+    AGU generation order (-1 before any). A misprediction at occurrence
+    ``(L, k)`` opens a new epoch whose *gate* fires
+    ``SimParams.squash_latency`` cycles after L's k-th value is
+    delivered: requests of that epoch may not issue earlier (the AGU
+    regenerated them from the true value).
+  * **Squash.** Requests the AGU issued *under* the mispredicted value
+    (wrong trip tail, wrong address) are squashed, not rolled back:
+    they are accounted as phantom traffic released at the gate's fire
+    time — squashed loads occupy DU issue slots and DRAM bandwidth,
+    squashed stores occupy issue slots and ACK at the pending-buffer
+    head without DRAM (Fig. 7). Phantoms never enter the
+    hazard-visible port state: frontiers advance only on true
+    program-order requests, which is conservative in timing and keeps
+    the §5 hazard argument (and final-array exactness) untouched.
+
+The *true* request streams themselves are computed against the
+sequential oracle's load values — sound for the same reason
+``dae.record_cu_script`` is: the engines' validated delivery contract
+guarantees every load receives its oracle value regardless of timing,
+so the speculative AGU's post-squash stream is exactly the oracle-fed
+stream. ``schedule.trace_program`` routes speculative PEs here and
+returns the accumulated ``SpecPlan`` to the engines.
+
+When speculation cannot even run ahead — a trip depending on a load
+*inside* the loop it bounds, or an AGU value that is simply unavailable
+at its use point — ``trace_spec_pe`` falls back to rejecting with
+``LossOfDecoupling`` (the documented ``auto``-mode reject rule).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import dae as daelib
+from repro.core import loopir as ir
+
+
+# How far the run-ahead AGU gets before a mispredicted value's truth
+# arrives and squashes it, per (epoch, op): one DRAM burst's worth of
+# requests (§2.1.1, N=16). Squash traffic per misprediction is capped
+# here — the run-ahead window of real speculative dataflow hardware is
+# a queue depth, not the whole dependent region.
+RUNAHEAD_CAP = 16
+
+
+@dataclasses.dataclass
+class SpecPlan:
+    """Engine-facing speculation schedule of one compiled program.
+
+    ``gates[op]`` tags every request of ``op`` with its epoch id (-1 =
+    epoch 0, never gated); ids are non-decreasing along each stream.
+    ``triggers[g]`` is the ``(load op id, delivery index)`` whose value
+    delivery resolves epoch ``g``; ``resolve_of[load op]`` maps each
+    delivery index to the epoch it resolves (-1 = none).
+    ``phantoms[g]`` lists ``(op id, count, is_store)`` squashed requests
+    released when gate ``g`` fires.
+    """
+
+    gates: dict = dataclasses.field(default_factory=dict)
+    triggers: list = dataclasses.field(default_factory=list)
+    resolve_of: dict = dataclasses.field(default_factory=dict)
+    phantoms: list = dataclasses.field(default_factory=list)
+    pe_ids: list = dataclasses.field(default_factory=list)
+    predictions: int = 0
+    mispredictions: int = 0
+    phantom_requests: int = 0
+
+    @property
+    def n_gates(self) -> int:
+        return len(self.triggers)
+
+    def summary(self) -> dict:
+        """Counters for benchmarks/reports (JSON-friendly)."""
+        return {
+            "speculative_pes": list(self.pe_ids),
+            "predictions": self.predictions,
+            "mispredictions": self.mispredictions,
+            "phantom_requests": self.phantom_requests,
+            "gates": self.n_gates,
+        }
+
+
+def fire_phantoms(
+    plan: SpecPlan,
+    gid: int,
+    now: int,
+    channel_free_at: int,
+    burst_size: int,
+    channel_occupancy: int,
+    result,
+) -> int:
+    """Shared squash-release accounting of both engines' ``_fire_gate``:
+    count gate ``gid``'s phantoms into ``result.squashed``, charge the
+    squashed *loads* to the DRAM channel (squashed stores ACK without
+    DRAM, Fig. 7), and return the updated ``channel_free_at``. Keeping
+    this in one place is what keeps the engines' ``squashed``/DRAM
+    counters bit-identical (tests/test_speculation.py)."""
+    n_load = 0
+    total = 0
+    for _op, count, is_store in plan.phantoms[gid]:
+        total += count
+        if not is_store:
+            n_load += count
+    result.squashed += total
+    if n_load:
+        nb = -(-n_load // burst_size)
+        issue = max(now, channel_free_at)
+        channel_free_at = issue + nb * channel_occupancy
+        result.dram_bursts += nb
+        result.dram_requests += n_load
+    return channel_free_at
+
+
+def interpret_hooked(
+    program: ir.Program,
+    arrays: dict[str, np.ndarray],
+    params: Optional[dict],
+    trace_hook,
+) -> dict[str, np.ndarray]:
+    """``loopir.interpret`` with the speculative auto-reject applied:
+    a load value consumed before it exists even sequentially (e.g. a
+    trip reading a load of the loop it bounds) becomes the documented
+    ``LossOfDecoupling`` — speculation cannot repair an ill-defined
+    program. Other KeyErrors (typo'd array/param names) propagate
+    untouched. The single conversion site shared by ``simulate()``
+    (via ``oracle_load_streams``) and ``executor.execute``."""
+    try:
+        return ir.interpret(program, arrays, params or {}, trace_hook=trace_hook)
+    except ir.UnavailableLoadValue as exc:
+        raise daelib.LossOfDecoupling(
+            f"value {exc} is unavailable at its use point even in the "
+            f"sequential oracle — speculation cannot run ahead"
+        ) from None
+
+
+def oracle_load_streams(
+    program: ir.Program,
+    arrays: dict[str, np.ndarray],
+    params: Optional[dict] = None,
+) -> dict[str, list]:
+    """Per-op in-order load value streams from the sequential oracle —
+    the ground truth the speculative AGU's predictor is scored against
+    (and what the engines are contracted to deliver)."""
+    loads: dict[str, list] = {}
+
+    def hook(op_id, addr, is_store, valid, value):
+        if not is_store:
+            loads.setdefault(op_id, []).append(value)
+
+    interpret_hooked(program, arrays, params, hook)
+    return loads
+
+
+def trace_spec_pe(
+    pe: daelib.PE,
+    info: daelib.SpecInfo,
+    arrays: dict[str, np.ndarray],
+    params: dict,
+    oracle_loads: dict[str, list],
+    plan: SpecPlan,
+):
+    """Run the speculative AGU of one PE and record its true request
+    streams plus epoch/squash bookkeeping into ``plan``.
+
+    Returns a ``schedule.PETrace`` (imported lazily to avoid the
+    schedule <-> speculate cycle) whose streams are identical to what
+    ``schedule._trace_pe`` would produce if it could read protected
+    load values — the hazard machinery sees ordinary program-order
+    streams; speculation only adds the per-request epoch tags and the
+    phantom traffic in ``plan``.
+    """
+    from repro.core import schedule as schedlib
+
+    plan.pe_ids.append(pe.id)
+    spec_loads = set(info.loads)
+
+    rec: dict[str, dict[str, list]] = {
+        op_id: {"sched": [], "addr": [], "lastiter": [], "seq": [], "gate": []}
+        for op_id in pe.mem_ops
+    }
+    seq_counter = [0]
+    _, op_depth, op_store = schedlib._static_op_meta(pe)
+
+    by_depth: dict[int, list[ir.Stmt]] = {}
+    for s, d in pe.stmts:
+        by_depth.setdefault(d, []).append(s)
+
+    counters = [0] * (pe.depth + 1)
+    last_flags = [False] * (pe.depth + 1)
+    n_leaf = 0
+
+    # ---- speculation state ------------------------------------------------
+    occ: dict[str, int] = {}  # delivery index per load op
+    last_val: dict[str, float] = {}  # last-value predictor state
+    pred_val: dict[str, float] = {}  # prediction made for latest occurrence
+    mispred: dict[str, bool] = {}  # latest occurrence mispredicted?
+    gate_of: dict[str, int] = {}  # gate of latest (mispredicted) occurrence
+    tainted: dict[str, int] = {}  # AGU local -> gate of the bad value
+    cur_gate = [-1]  # epoch tag of requests emitted from here on
+
+    def eval_expr(e: ir.Expr, scope: ir._Env, loadvals: dict):
+        try:
+            return ir._eval(e, scope, arrays, params, loadvals)
+        except ir.UnavailableLoadValue as exc:
+            raise daelib.LossOfDecoupling(
+                f"PE {pe.id}: AGU value {exc} is unavailable at its use "
+                f"point (e.g. a trip depending on a load inside the loop "
+                f"it bounds) — speculation cannot run ahead"
+            ) from None
+
+    def bad_epoch(e: ir.Expr) -> Optional[int]:
+        """Gate id of the most recent misprediction feeding ``e``'s
+        current value, or None when every input was predicted right."""
+        locals_, loads = daelib.expr_deps(e)
+        gids = [gate_of[l] for l in loads if mispred.get(l)]
+        gids += [tainted[n] for n in locals_ if n in tainted]
+        return max(gids) if gids else None
+
+    phantom_counts: dict[tuple[int, str], int] = {}
+
+    def phantom(gid: int, op_id: str, count: int, is_store: bool):
+        # cap the squash window per (epoch, op) at RUNAHEAD_CAP: the
+        # run-ahead AGU only gets one burst ahead before the truth
+        # arrives and squashes it
+        seen = phantom_counts.get((gid, op_id), 0)
+        count = min(int(count), RUNAHEAD_CAP - seen)
+        if count <= 0:
+            return
+        phantom_counts[(gid, op_id)] = seen + count
+        plan.phantoms[gid].append((op_id, count, is_store))
+        plan.phantom_requests += count
+
+    def eval_trip(loop: ir.Loop, scope: ir._Env, loadvals: dict, d: int) -> int:
+        trip = int(eval_expr(loop.trip, scope, loadvals))
+        gid = bad_epoch(loop.trip)
+        if gid is not None:
+            # the AGU entered this loop with a mispredicted bound: the
+            # over-predicted tail iterations were issued and squashed.
+            # First-order estimate: re-evaluate the trip under the
+            # predicted values (taint through locals has no closed
+            # predicted value — counted as gated, not phantom).
+            _, loads = daelib.expr_deps(loop.trip)
+            if any(mispred.get(l) for l in loads):
+                lv = dict(loadvals)
+                for l in loads:
+                    if mispred.get(l):
+                        lv[l] = pred_val[l]
+                trip_pred = max(0, int(eval_expr(loop.trip, scope, lv)))
+                extra = max(0, trip_pred - max(0, trip))
+                for s in by_depth.get(d, ()):
+                    if isinstance(s, (ir.Load, ir.Store)):
+                        phantom(gid, s.id, extra, isinstance(s, ir.Store))
+        return trip
+
+    def run_depth(d: int, scope: ir._Env, outer_loadvals: dict):
+        nonlocal n_leaf
+        loop = pe.path[d - 1]
+        loop_scope = ir._Env(scope)
+        for iv in loop.ivars:
+            loop_scope.define(iv.name, eval_expr(iv.init, scope, outer_loadvals))
+        trip = eval_trip(loop, scope, outer_loadvals, d)
+        for i in range(trip):
+            counters[d] += 1
+            body = ir._Env(loop_scope)
+            body.define(loop.var, i)
+            last_flags[d] = (i == trip - 1) if loop.predictable else False
+            if d == pe.depth:
+                n_leaf += 1
+            loadvals = dict(outer_loadvals)
+            for s in by_depth.get(d, ()):
+                exec_stmt(s, body, d, loadvals)
+            if d < pe.depth:
+                run_depth(d + 1, body, loadvals)
+            for iv in loop.ivars:
+                cur = loop_scope.get(iv.name)
+                step = eval_expr(iv.step, body, outer_loadvals)
+                loop_scope.vals[iv.name] = (
+                    cur + step if iv.op == "+" else cur * step
+                )
+
+    def exec_stmt(s: ir.Stmt, scope: ir._Env, d: int, loadvals: dict):
+        if isinstance(s, (ir.Load, ir.Store)):
+            gid = bad_epoch(s.addr)
+            if gid is not None:
+                # the run-ahead AGU issued this request with a wrong
+                # address; the corrected re-issue below is epoch-gated
+                phantom(gid, s.id, 1, isinstance(s, ir.Store))
+            a = int(eval_expr(s.addr, scope, loadvals))
+            r = rec[s.id]
+            r["sched"].append(tuple(counters[1 : d + 1]))
+            r["addr"].append(a)
+            r["lastiter"].append(tuple(last_flags[1 : d + 1]))
+            r["seq"].append(seq_counter[0])
+            r["gate"].append(cur_gate[0])
+            seq_counter[0] += 1
+            if isinstance(s, ir.Load):
+                k = occ.get(s.id, 0)
+                occ[s.id] = k + 1
+                truth = float(oracle_loads.get(s.id, [])[k])
+                loadvals[s.id] = truth
+                if s.id in spec_loads:
+                    pred = last_val.get(s.id, 0.0)
+                    plan.predictions += 1
+                    pred_val[s.id] = pred
+                    if pred != truth:
+                        gid = len(plan.triggers)
+                        plan.triggers.append((s.id, k))
+                        plan.phantoms.append([])
+                        plan.mispredictions += 1
+                        mispred[s.id] = True
+                        gate_of[s.id] = gid
+                        cur_gate[0] = gid
+                    else:
+                        mispred[s.id] = False
+                    last_val[s.id] = truth
+        elif isinstance(s, ir.SetLocal):
+            gid = bad_epoch(s.value)
+            v = eval_expr(s.value, scope, loadvals)
+            if not scope.set_existing(s.name, v):
+                scope.define(s.name, v)
+            if gid is not None:
+                tainted[s.name] = gid
+            else:
+                tainted.pop(s.name, None)
+
+    if pe.depth >= 1:
+        run_depth(1, ir._Env(), {})
+
+    ops = {}
+    for op_id in pe.mem_ops:
+        r = rec[op_id]
+        d = op_depth[op_id]
+        n = len(r["addr"])
+        ops[op_id] = schedlib.OpTrace(
+            op_id=op_id,
+            pe_id=pe.id,
+            depth=d,
+            is_store=op_store[op_id],
+            sched=np.array(r["sched"], dtype=np.int64).reshape(n, d),
+            addr=np.array(r["addr"], dtype=np.int64).reshape(n),
+            lastiter=np.array(r["lastiter"], dtype=bool).reshape(n, d),
+            seq=np.array(r["seq"], dtype=np.int64).reshape(n),
+        )
+        plan.gates[op_id] = np.array(r["gate"], dtype=np.int64).reshape(n)
+    _finalize_resolve(plan)
+    return schedlib.PETrace(pe_id=pe.id, ops=ops, n_leaf_iters=n_leaf)
+
+
+def _finalize_resolve(plan: SpecPlan) -> None:
+    """(Re)build ``resolve_of`` from ``triggers`` — delivery index ->
+    gate id per spec load port. Idempotent across multiple PEs."""
+    per_op: dict[str, dict[int, int]] = {}
+    for gid, (op_id, k) in enumerate(plan.triggers):
+        per_op.setdefault(op_id, {})[k] = gid
+    plan.resolve_of = {
+        op_id: _to_resolve_array(m) for op_id, m in per_op.items()
+    }
+
+
+def _to_resolve_array(m: dict[int, int]) -> np.ndarray:
+    n = max(m) + 1
+    out = np.full(n, -1, dtype=np.int64)
+    for k, gid in m.items():
+        out[k] = gid
+    return out

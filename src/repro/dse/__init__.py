@@ -7,14 +7,17 @@ single points. This package turns the three single-shot layers
 many-point service:
 
   * ``SweepSpec`` (``dse.spec``) — a grid/list of sweep points:
-    kernel × scale × mode × engine × trace_mode × ``SimParams`` sizing.
-  * the planner (``dse.planner``) — groups points by (kernel, scale),
-    **deduplicates** points whose results are provably identical
-    (trace modes produce bit-identical streams; STA ignores the
-    engine), and builds per-group shared artifacts: one compiled trace
-    set, one hazard analysis per forwarding class, one hooked oracle
-    run, shared §5.6 bit streams / LSQ rank tables, and recorded CU
-    scripts replayed per timing point (``dae.ReplayCU``).
+    kernel × scale × mode × engine × trace_mode × speculation ×
+    ``SimParams`` sizing.
+  * the planner (``dse.planner``) — groups points by (kernel, scale,
+    speculation class), **deduplicates** points whose results are
+    provably identical (trace modes produce bit-identical streams; STA
+    ignores the engine; the speculation knob folds for kernels that
+    never speculate), and builds per-group shared artifacts: one
+    compiled trace set (plus its ``speculate.SpecPlan`` when the group
+    speculates), one hazard analysis per forwarding class, one hooked
+    oracle run, shared §5.6 bit streams / LSQ rank tables, and recorded
+    CU scripts replayed per timing point (``dae.ReplayCU``).
   * the runner (``dse.runner``) — exact per-point engine runs on the
     shared artifacts (bit-identical to standalone ``simulate()``),
     optionally parallel across groups, with a config-batched

@@ -12,7 +12,8 @@ does not:
   * **program** — ``Program.fingerprint()`` (structural IR hash),
   * **data** — array names, dtypes, shapes and bytes; parameter values,
   * **configuration** — mode, engine class (``"-"`` for STA, which has
-    no engine), and the canonical ``SimParams`` override tuple.
+    no engine), the canonical ``SimParams`` override tuple, and the
+    speculation class (``"-"`` for kernels the knob cannot affect).
 
 ``trace_mode`` is deliberately absent: compiled and interpreted AGU
 streams are bit-identical (the PR-2 contract), so all trace modes share
@@ -67,8 +68,14 @@ def result_cache_key(
     engine_class: str,
     sim: tuple,
     version: Optional[str] = None,
+    speculation: str = "-",
 ) -> str:
-    """Content hash naming one cache entry (hex sha256)."""
+    """Content hash naming one cache entry (hex sha256).
+
+    ``speculation`` is the point's *spec class* (``SweepPoint.
+    spec_class``): ``"-"`` for kernels the knob cannot affect — so
+    ``off``/``auto`` share one entry there — else the knob value.
+    """
     h = hashlib.sha256()
     h.update(f"format={CACHE_FORMAT}\x00".encode())
     h.update((version or code_version()).encode())
@@ -78,7 +85,7 @@ def result_cache_key(
         h.update(f"{name}:{a.dtype.str}:{a.shape}\x00".encode())
         h.update(a.tobytes())
     h.update(repr(sorted((params or {}).items())).encode())
-    h.update(f"\x00{mode}\x00{engine_class}\x00{sim!r}".encode())
+    h.update(f"\x00{mode}\x00{engine_class}\x00{sim!r}\x00{speculation}".encode())
     return h.hexdigest()
 
 
@@ -116,6 +123,7 @@ class ResultCache:
             dram_bursts=meta["dram_bursts"],
             dram_requests=meta["dram_requests"],
             forwards=meta["forwards"],
+            squashed=meta.get("squashed", 0),
         )
 
     def put(self, key: str, result: SimResult) -> None:

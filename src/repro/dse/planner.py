@@ -54,6 +54,11 @@ class Group:
     kernel: str
     scale: int
     runs: list  # [UniqueRun]
+    # the decoupling policy this group compiles under: "auto" only when
+    # its points actually speculate (SweepPoint.spec_class); points
+    # whose knob provably cannot change the result share the "off"
+    # compile (the fourth result-invariance, dse.spec)
+    speculation: str = "off"
 
     @property
     def n_points(self) -> int:
@@ -61,18 +66,21 @@ class Group:
 
 
 def plan(points: list[SweepPoint]) -> list[Group]:
-    """Group points by (kernel, scale) and dedup by result key."""
+    """Group points by (kernel, scale, spec class), dedup by result key."""
     groups: dict[tuple, dict[tuple, UniqueRun]] = {}
     for i, p in enumerate(points):
-        g = groups.setdefault((p.kernel, p.scale), {})
+        g = groups.setdefault((p.kernel, p.scale, p.spec_class), {})
         run = g.get(p.result_key)
         if run is None:
             g[p.result_key] = UniqueRun(key=p.result_key, rep=p, point_indices=[i])
         else:
             run.point_indices.append(i)
     return [
-        Group(kernel=k, scale=s, runs=list(g.values()))
-        for (k, s), g in sorted(groups.items())
+        Group(
+            kernel=k, scale=s, runs=list(g.values()),
+            speculation="auto" if sc == "auto" else "off",
+        )
+        for (k, s, sc), g in sorted(groups.items())
     ]
 
 
@@ -91,22 +99,43 @@ class GroupContext:
 
     @cached_property
     def comp_fwd(self) -> simulator.Compiled:
-        return simulator.Compiled(self.program, forwarding=True)
+        return simulator.Compiled(
+            self.program, forwarding=True, speculation=self.group.speculation
+        )
 
     @cached_property
     def comp_nofwd(self) -> simulator.Compiled:
-        return simulator.Compiled(self.program, forwarding=False)
+        return simulator.Compiled(
+            self.program, forwarding=False, speculation=self.group.speculation
+        )
 
     def comp(self, mode: str) -> simulator.Compiled:
         return self.comp_fwd if mode == "FUS2" else self.comp_nofwd
 
     @cached_property
+    def _traced(self) -> tuple:
+        """(trace set, SpecPlan | None) — one shared build per group.
+        Speculative groups reuse the group's hooked oracle run for the
+        predictor's load streams (no second sequential walk)."""
+        spec_out: list = []
+        traces = schedlib.trace_program(
+            self.program, self.comp_nofwd.dae, self.arrays, self.params,
+            mode="auto", spec_out=spec_out,
+            oracle_loads=(
+                self.oracle_loads if self.comp_nofwd.dae.spec else None
+            ),
+        )
+        return traces, (spec_out[0] if spec_out else None)
+
+    @property
     def traces(self) -> dict[str, schedlib.OpTrace]:
         """The single shared AGU trace set (compiled where possible)."""
-        return schedlib.trace_program(
-            self.program, self.comp_nofwd.dae, self.arrays, self.params,
-            mode="auto",
-        )
+        return self._traced[0]
+
+    @property
+    def spec_plan(self):
+        """Shared speculation plan (``speculate.SpecPlan``), or None."""
+        return self._traced[1]
 
     def check_strict_compiled(self) -> None:
         """Raise ``TraceCompileError`` exactly as ``simulate()`` with

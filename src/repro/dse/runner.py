@@ -75,8 +75,10 @@ class SweepResult:
                 "kernel": p.kernel, "scale": p.scale, "mode": p.mode,
                 "engine": p.engine, "trace_mode": p.trace_mode,
                 "sizing": p.sizing, "sim": dict(p.sim),
+                "speculation": p.speculation,
                 "cycles": r.cycles, "dram_bursts": r.dram_bursts,
                 "dram_requests": r.dram_requests, "forwards": r.forwards,
+                "squashed": r.squashed,
                 "cached": pr.cached, "run_wall_s": pr.run_wall_s,
             })
         return out
@@ -184,14 +186,14 @@ def _execute_run(ctx: GroupContext, run: UniqueRun, validate: bool):
         res = simulator.simulate_traced(
             ctx.comp(mode), ctx.traces, ctx.arrays, ctx.params, mode=mode,
             sim=p, engine=rep.engine, oracle_loads=oracle_loads,
-            shared=shared,
+            shared=shared, spec_plan=ctx.spec_plan,
         )
         return res, None
     from repro.core import engine_event
 
     ev = engine_event.EventEngine(
         ctx.comp(mode), ctx.traces, ctx.arrays, ctx.params, mode, p,
-        oracle_loads=oracle_loads, shared=shared,
+        oracle_loads=oracle_loads, shared=shared, spec=ctx.spec_plan,
     )
     res = ev.run()
     states = {op: _port_state(port) for op, port in ev.ports.items()}
@@ -225,6 +227,7 @@ def _run_group_task(args):
             key = cachelib.result_cache_key(
                 ctx.program, ctx.arrays, ctx.params, rep.mode,
                 "-" if rep.mode == "STA" else rep.engine, rep.relevant_sim,
+                speculation=rep.spec_class,
             )
             # validate=True means "actually check this configuration":
             # cached results carry no validation, so only write-through

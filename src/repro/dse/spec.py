@@ -1,8 +1,9 @@
 """Sweep specification: the configuration grid of a design-space run.
 
 A *sweep point* is one fully specified simulation:
-``(kernel, scale, mode, engine, trace_mode, SimParams sizing)``. A
-``SweepSpec`` expands a grid (or several stacked grids) into points.
+``(kernel, scale, mode, engine, trace_mode, speculation, SimParams
+sizing)``. A ``SweepSpec`` expands a grid (or several stacked grids)
+into points.
 
 Two distinct notions of identity matter downstream:
 
@@ -22,7 +23,11 @@ Two distinct notions of identity matter downstream:
          reads CU/forwarding latencies, the dynamic engines never read
          ``sta_mem_dep_ii``/``pipeline_fill``, LSQ forces burst size 1,
          and FUS1/LSQ never forward — so e.g. a calibration grid over
-         ``sta_mem_dep_ii`` x all four systems re-runs only STA.
+         ``sta_mem_dep_ii`` x all four systems re-runs only STA,
+      4. the ``speculation`` knob folds to ``"-"`` for kernels the
+         decoupling pass never marks speculative (``spec_class``) —
+         ``"off"`` and ``"auto"`` provably share results there, and
+         ``squash_latency`` overrides are projected out with it.
 """
 
 from __future__ import annotations
@@ -36,6 +41,7 @@ from repro.core.simulator import SimParams
 MODES = ("STA", "LSQ", "FUS1", "FUS2")
 ENGINES = ("cycle", "event")
 TRACE_MODES = ("auto", "compiled", "interp")
+SPECULATIONS = ("off", "auto")
 
 _SIM_FIELDS = tuple(f.name for f in dataclasses.fields(SimParams))
 
@@ -43,6 +49,9 @@ _SIM_FIELDS = tuple(f.name for f in dataclasses.fields(SimParams))
 # simulator._simulate_sta and the two engines; the batch-vs-single
 # differential in tests/test_dse.py would catch any drift). The result
 # identity of a point projects its overrides onto this set.
+# ``squash_latency`` is additionally projected out unless the point
+# actually speculates (``SweepPoint.spec_class == "auto"``) — the
+# engines only read it through a live SpecPlan.
 _DYN_COMMON = (
     "dram_latency", "burst_timeout", "channel_occupancy", "cu_latency",
     "max_cycles",
@@ -52,9 +61,9 @@ MODE_SIM_FIELDS = {
         "dram_latency", "burst_size", "channel_occupancy",
         "pipeline_fill", "sta_mem_dep_ii",
     ),
-    "LSQ": _DYN_COMMON,  # burst size forced to 1; never forwards
-    "FUS1": _DYN_COMMON + ("burst_size",),  # never forwards
-    "FUS2": _DYN_COMMON + ("burst_size", "forward_latency"),
+    "LSQ": _DYN_COMMON + ("squash_latency",),  # burst 1; never forwards
+    "FUS1": _DYN_COMMON + ("burst_size", "squash_latency"),
+    "FUS2": _DYN_COMMON + ("burst_size", "forward_latency", "squash_latency"),
 }
 
 
@@ -88,6 +97,7 @@ class SweepPoint:
     trace_mode: str = "auto"
     sim: tuple = ()  # canonical ((field, value), ...) SimParams overrides
     sizing: str = "base"  # display label for the sim overrides
+    speculation: str = "off"  # loss-of-decoupling policy (DESIGN.md §10)
 
     def __post_init__(self):
         assert self.kernel in programs.REGISTRY, f"unknown kernel {self.kernel!r}"
@@ -95,6 +105,9 @@ class SweepPoint:
         assert self.engine in ENGINES, f"unknown engine {self.engine!r}"
         assert self.trace_mode in TRACE_MODES, (
             f"unknown trace mode {self.trace_mode!r}"
+        )
+        assert self.speculation in SPECULATIONS, (
+            f"unknown speculation mode {self.speculation!r}"
         )
         object.__setattr__(self, "sim", _canon_sim(self.sim))
 
@@ -105,29 +118,43 @@ class SweepPoint:
     def point_id(self) -> tuple:
         return (
             self.kernel, self.scale, self.mode, self.engine,
-            self.trace_mode, self.sim,
+            self.trace_mode, self.sim, self.speculation,
         )
+
+    @property
+    def spec_class(self) -> str:
+        """Speculation part of the result identity: ``"-"`` for kernels
+        that never speculate (the knob provably cannot change their
+        result — ``decouple`` marks no PE, so ``"off"`` and ``"auto"``
+        fold together), else the knob value itself."""
+        if not programs.REGISTRY[self.kernel].speculative:
+            return "-"
+        return self.speculation
 
     @property
     def relevant_sim(self) -> tuple:
         """``sim`` projected onto the fields this point's mode reads
         (``MODE_SIM_FIELDS``) — the SimParams part of the result
-        identity."""
+        identity. ``squash_latency`` only counts when the point
+        actually speculates."""
         fields = MODE_SIM_FIELDS[self.mode]
+        if self.spec_class != "auto":
+            fields = tuple(f for f in fields if f != "squash_latency")
         return tuple((k, v) for k, v in self.sim if k in fields)
 
     @property
     def result_key(self) -> tuple:
         """Dedup/cache identity: what the SimResult depends on.
 
-        Excludes ``trace_mode`` entirely, ``engine`` for STA, and any
-        SimParams override the mode never reads — the three
-        result-invariances the planner exploits (DESIGN.md §9.1).
+        Excludes ``trace_mode`` entirely, ``engine`` for STA, any
+        SimParams override the mode never reads, and folds the
+        speculation knob for non-speculative kernels (``spec_class``) —
+        the result-invariances the planner exploits (DESIGN.md §9.1).
         """
         engine_class = "-" if self.mode == "STA" else self.engine
         return (
             self.kernel, self.scale, self.mode, engine_class,
-            self.relevant_sim,
+            self.relevant_sim, self.spec_class,
         )
 
 
@@ -151,6 +178,10 @@ class SweepSpec:
     engines: Sequence[str] = ("event",)
     trace_modes: Sequence[str] = ("auto",)
     sizings: Optional[dict] = None
+    # loss-of-decoupling axis: sweeps over speculative kernels need
+    # ("auto",) — an "off" point on such a kernel raises exactly like
+    # standalone simulate() would
+    speculations: Sequence[str] = ("off",)
     extra: Sequence["SweepSpec"] = ()
 
     def points(self) -> list[SweepPoint]:
@@ -165,15 +196,17 @@ class SweepSpec:
             for mode in self.modes:
                 for engine in self.engines:
                     for tm in self.trace_modes:
-                        for label, sim in sizings.items():
-                            p = SweepPoint(
-                                kernel=k, scale=scale, mode=mode,
-                                engine=engine, trace_mode=tm,
-                                sim=_canon_sim(sim), sizing=label,
-                            )
-                            if p.point_id not in seen:
-                                seen.add(p.point_id)
-                                out.append(p)
+                        for spec_mode in self.speculations:
+                            for label, sim in sizings.items():
+                                p = SweepPoint(
+                                    kernel=k, scale=scale, mode=mode,
+                                    engine=engine, trace_mode=tm,
+                                    sim=_canon_sim(sim), sizing=label,
+                                    speculation=spec_mode,
+                                )
+                                if p.point_id not in seen:
+                                    seen.add(p.point_id)
+                                    out.append(p)
         for sub in self.extra:
             for p in sub.points():
                 if p.point_id not in seen:

@@ -1,0 +1,48 @@
+"""Pure-numpy oracles for the load-dependent-trip kernels.
+
+These recompute the final protected-array state of the speculative
+kernels (``repro.core.programs``: ``spmv_ldtrip``, ``bfs_front``,
+``chase_sum``) directly from their inputs — independently of LoopIR —
+so tests can pin ``loopir.interpret`` (and therefore every engine,
+which is differential-tested against the interpreter) to a second,
+hand-written semantics.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def spmv_ldtrip_ref(deg, rp, cidx, val, x):
+    """y[i] = sum_k val[rp[i]+k] * x[cidx[rp[i]+k]] over deg[i] entries;
+    also returns the published rowlen array (= deg)."""
+    rows = len(deg)
+    y = np.zeros(rows, dtype=np.float64)
+    for i in range(rows):
+        for k in range(int(deg[i])):
+            e = int(rp[i]) + k
+            y[i] += val[e] * x[int(cidx[e])]
+    return np.asarray(deg, dtype=np.float64).copy(), y
+
+
+def bfs_front_ref(off0, front, nodeval, nodes):
+    """visit[pos] = nodeval[front[pos]] + 1 for every frontier position;
+    also returns the published foff array (= off0)."""
+    visit = np.zeros(nodes, dtype=np.float64)
+    levels = len(off0) - 1
+    for t in range(levels):
+        lo, hi = int(off0[t]), int(off0[t + 1])
+        for pos in range(lo, hi):
+            visit[pos] = nodeval[int(front[pos])] + 1.0
+    return np.asarray(off0, dtype=np.float64).copy(), visit
+
+
+def chase_sum_ref(nxt, w, n):
+    """out[i] = w[p] + p where p walks the ``nxt`` chain from node 0."""
+    out = np.zeros(n, dtype=np.float64)
+    cur = 0
+    for i in range(n):
+        p = int(nxt[cur])
+        out[i] = w[p] + p
+        cur = p
+    return out

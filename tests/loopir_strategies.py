@@ -178,6 +178,63 @@ def random_affine_program(rng, max_depth: int = 3):
     return prog, arrays, params
 
 
+def random_spec_program(rng, max_rows: int = 6):
+    """Random loss-of-decoupling programs: an inner trip count (and
+    sometimes a store address) depends on a protected load value, so
+    ``dae.decouple`` only admits them under ``speculation="auto"``
+    (DESIGN.md §10). Length values repeat (a small pool) so the
+    last-value predictor hits sometimes and misses sometimes — both
+    squash paths get exercised. Used by the speculation differential
+    in tests/test_speculation.py (deterministic seeds in tier-1, the
+    hypothesis wrapper in the nightly fuzz job)."""
+    rows = int(rng.integers(1, max_rows + 1))
+    pool = [int(rng.integers(0, 4)) for _ in range(int(rng.integers(1, 3)))]
+    lens = np.array(
+        [pool[int(rng.integers(0, len(pool)))] for _ in range(rows)],
+        dtype=np.float64,
+    )
+    arrays = {
+        "lens": lens.copy(),
+        "src": lens.copy(),
+        "data": rng.standard_normal(64),
+        "out": np.zeros(64, dtype=np.float64),
+    }
+    loops = []
+    if rng.integers(0, 2):
+        # producer publishes the lengths -> a cross-PE RAW into the
+        # speculative consumer's trip load
+        arrays["lens"] = np.zeros(rows, dtype=np.float64)
+        loops.append(
+            ir.Loop("p", ir.Const(rows), (
+                ir.Store("st_lens", "lens", ir.Var("p"), ir.Read("src", ir.Var("p"))),
+            ))
+        )
+
+    # trip: LoadVal, LoadVal + c, or LoadVal - 1 (may clamp to empty)
+    lv = ir.LoadVal("ld_len")
+    trip = _choice(rng, [lv, lv + int(rng.integers(1, 3)), ir.Bin("-", lv, ir.Const(1))])
+    inner = [
+        ir.Load("ld_d", "data", ir.Bin("%", ir.Var("k") * 3 + ir.Var("i"), ir.Const(64))),
+    ]
+    if rng.integers(0, 2):
+        # load-dependent *address* as well: epoch-gated store stream
+        st_addr = ir.Bin("%", lv * 2 + ir.Var("k"), ir.Const(64))
+    else:
+        st_addr = ir.Bin("%", ir.Var("i") * 5 + ir.Var("k"), ir.Const(64))
+    inner.append(
+        ir.Store("st_o", "out", st_addr, ir.LoadVal("ld_d") + 0.5)
+    )
+    loops.append(
+        ir.Loop("i", ir.Const(rows), (
+            ir.Load("ld_len", "lens", ir.Var("i")),
+            ir.Loop("k", trip, tuple(inner),
+                    predictable=bool(rng.integers(0, 2))),
+        ))
+    )
+    prog = ir.Program("specfuzz", loops=tuple(loops))
+    return prog, arrays, {}
+
+
 def random_loadfree_cu_program(rng, max_depth: int = 2):
     """Random programs whose PEs are all load-free value chains: stores
     with vectorizable values and (sometimes) §6 guards — the dae.VecCU
@@ -251,4 +308,11 @@ if HAVE_HYPOTHESIS:
         seed = draw(st.integers(0, 2**31))
         return random_loadfree_cu_program(
             np.random.default_rng(seed), max_depth=max_depth
+        )
+
+    @st.composite
+    def spec_programs(draw, max_rows: int = 6):
+        seed = draw(st.integers(0, 2**31))
+        return random_spec_program(
+            np.random.default_rng(seed), max_rows=max_rows
         )

@@ -106,3 +106,45 @@ def test_code_version_is_stable_and_source_sensitive():
     v1 = cachelib.code_version()
     assert v1 == cachelib.code_version()
     assert len(v1) == 64 and int(v1, 16) >= 0
+
+
+def test_code_version_covers_every_core_module(monkeypatch):
+    """The code-version hash must glob repro.core (it does — this pins
+    it against regressing to a hard-coded file list): ADDING a module
+    under core/, e.g. a new speculation pass, invalidates the key."""
+    import os
+
+    import repro.core
+
+    root = os.path.dirname(repro.core.__file__)
+    listed = {
+        fn for fn in os.listdir(root) if fn.endswith(".py")
+    }
+    # sanity: the modules the simulator depends on are all picked up,
+    # including the speculation module this guard was written for
+    for mod in ("dae.py", "speculate.py", "engine_event.py", "schedule.py"):
+        assert mod in listed
+    monkeypatch.setattr(cachelib, "_CODE_VERSION", None)
+    before = cachelib.code_version()
+    tmp = os.path.join(root, "_tmp_code_version_probe.py")
+    try:
+        with open(tmp, "w") as f:
+            f.write("# temporary module for test_dse_cache\n")
+    except OSError:
+        pytest.skip("package source tree is not writable")
+    try:
+        monkeypatch.setattr(cachelib, "_CODE_VERSION", None)
+        after = cachelib.code_version()
+    finally:
+        os.unlink(tmp)
+    assert before != after
+    monkeypatch.setattr(cachelib, "_CODE_VERSION", None)
+    assert cachelib.code_version() == before
+
+    # speculation class is part of the entry key (off/auto share only
+    # when the kernel cannot speculate — spec_class "-")
+    prog, arrays, params = programs.get("RAWloop").make(32)
+    base = cachelib.result_cache_key(prog, arrays, params, "FUS2", "event", ())
+    assert base != cachelib.result_cache_key(
+        prog, arrays, params, "FUS2", "event", (), speculation="auto"
+    )

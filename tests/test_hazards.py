@@ -10,7 +10,8 @@ from repro.core import programs
 
 def _plan(name, scale=16, forwarding=False):
     prog, arrays, params = programs.get(name).make(scale)
-    d = daelib.decouple(prog)
+    spec = "auto" if programs.get(name).speculative else "off"
+    d = daelib.decouple(prog, speculation=spec)
     infos = mono.analyze_program(prog)
     return prog, hz.build_plan(prog, d, infos, forwarding=forwarding)
 

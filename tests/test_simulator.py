@@ -19,8 +19,10 @@ def _scale(name):
 def test_matches_oracle(name, mode):
     prog, arrays, params = programs.get(name).make(_scale(name))
     oracle = loopir.interpret(prog, arrays, params)
+    spec = "auto" if programs.get(name).speculative else "off"
     res = simulator.simulate(
-        prog, arrays, params, mode=mode, validate=(mode != "STA")
+        prog, arrays, params, mode=mode, validate=(mode != "STA"),
+        speculation=spec,
     )
     for k in oracle:
         np.testing.assert_allclose(
@@ -84,7 +86,10 @@ def test_dram_coalescing_counts():
 def test_wave_executor_matches_oracle_and_reports_parallelism():
     for name in programs.all_names():
         prog, arrays, params = programs.get(name).make(_scale(name))
-        res = executor.execute(prog, arrays, params)  # asserts internally
+        spec = "auto" if programs.get(name).speculative else "off"
+        res = executor.execute(
+            prog, arrays, params, speculation=spec
+        )  # asserts internally
         assert res.stats.n_waves >= 1
         assert res.stats.parallelism >= 1.0
     # microbenchmark: two n-iteration loops collapse to O(1) waves

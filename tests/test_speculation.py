@@ -1,0 +1,477 @@
+"""Speculative AGU with rollback-free squash (DESIGN.md §10).
+
+Pins the loss-of-decoupling speculation subsystem end to end:
+
+  * the three load-dependent kernels (``programs.SPEC_KERNELS``) run
+    under ``speculation="auto"`` in every mode x engine, bit-identical
+    to ``loopir.interpret`` AND to the independent numpy oracles in
+    ``kernels/dynloop/ref.py``,
+  * ``speculation="off"`` still rejects, with diagnostics that name the
+    consuming statement (op id / loop trip / AGU local) — the message
+    shapes are part of the contract,
+  * the §6 mis-speculation substrate speculation builds on: the
+    interpreter's trace hook reports guarded-false stores with
+    ``valid=False, value=None``; both engines preserve request
+    existence for invalid stores (they occupy the stream and ACK
+    without DRAM),
+  * ``SpecPlan`` structure: epoch tags non-decreasing per stream,
+    trigger/resolve consistency, last-value predictor accounting,
+  * the DSE axis: ``speculation`` expands in ``SweepSpec``; the result
+    identity folds ``off``/``auto`` (and ``squash_latency``) for
+    kernels that never speculate,
+  * the random differential: generated load-dependent-trip programs
+    (tests/loopir_strategies.py) simulate oracle-exact in both engines
+    (deterministic seeds in tier-1; hypothesis strategy in the nightly
+    fuzz job),
+  * TABLE1 stays frozen at the paper's nine kernels (the registry may
+    grow, the paper's evaluation set may not).
+"""
+
+import numpy as np
+import pytest
+
+import loopir_strategies as strat
+from repro.core import dae as daelib
+from repro.core import engine_event
+from repro.core import loopir as ir
+from repro.core import programs
+from repro.core import schedule as schedlib
+from repro.core import simulator
+from repro.core import speculate
+from repro.kernels.dynloop import ref as dynref
+
+SCALES = {"spmv_ldtrip": 24, "bfs_front": 32, "chase_sum": 24}
+
+
+def _simulate_spec(name, mode, engine, scale=None, **kw):
+    prog, arrays, params = programs.get(name).make(scale or SCALES[name])
+    res = simulator.simulate(
+        prog, arrays, params, mode=mode, engine=engine,
+        speculation="auto", validate=(mode != "STA"), **kw,
+    )
+    oracle = ir.interpret(prog, arrays, params)
+    return res, oracle, (prog, arrays, params)
+
+
+# ---------------------------------------------------------------------------
+# kernel acceptance: every mode x engine, oracle- and ref-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ("cycle", "event"))
+@pytest.mark.parametrize("mode", ("STA", "LSQ", "FUS1", "FUS2"))
+@pytest.mark.parametrize("name", programs.SPEC_KERNELS)
+def test_spec_kernels_all_modes_oracle_exact(name, mode, engine):
+    res, oracle, _ = _simulate_spec(name, mode, engine)
+    for k in oracle:
+        np.testing.assert_array_equal(res.arrays[k], oracle[k], err_msg=k)
+
+
+@pytest.mark.parametrize("name", programs.SPEC_KERNELS)
+def test_spec_kernels_match_independent_refs(name):
+    prog, arrays, params = programs.get(name).make(SCALES[name])
+    final = ir.interpret(prog, arrays, params)
+    if name == "spmv_ldtrip":
+        rowlen, y = dynref.spmv_ldtrip_ref(
+            arrays["deg"], arrays["rp"], arrays["cidx"], arrays["val"],
+            arrays["x"],
+        )
+        np.testing.assert_allclose(final["rowlen"], rowlen, atol=1e-12)
+        np.testing.assert_allclose(final["y"], y, atol=1e-12)
+    elif name == "bfs_front":
+        foff, visit = dynref.bfs_front_ref(
+            arrays["off0"], arrays["front"], arrays["nodeval"],
+            len(arrays["visit"]),
+        )
+        np.testing.assert_allclose(final["foff"], foff, atol=1e-12)
+        np.testing.assert_allclose(final["visit"], visit, atol=1e-12)
+    else:  # chase_sum
+        out = dynref.chase_sum_ref(
+            arrays["nxt"], arrays["w"], params["n"]
+        )
+        np.testing.assert_allclose(final["out"], out, atol=1e-12)
+
+
+@pytest.mark.parametrize("name", programs.SPEC_KERNELS)
+def test_spec_kernels_rejected_without_speculation(name):
+    prog, arrays, params = programs.get(name).make(SCALES[name])
+    with pytest.raises(daelib.LossOfDecoupling, match="loss of decoupling"):
+        simulator.simulate(prog, arrays, params)
+
+
+@pytest.mark.parametrize("name", programs.SPEC_KERNELS)
+def test_spec_kernel_engines_agree(name):
+    rc, oracle, _ = _simulate_spec(name, "FUS2", "cycle")
+    re_, _, _ = _simulate_spec(name, "FUS2", "event")
+    for k in oracle:
+        np.testing.assert_array_equal(rc.arrays[k], re_.arrays[k])
+    assert rc.squashed == re_.squashed
+    assert rc.dram_requests == re_.dram_requests
+    # same drift envelope as test_engine_diff (DESIGN.md §1.2)
+    assert abs(rc.cycles - re_.cycles) <= max(2, int(0.02 * rc.cycles))
+
+
+def test_trace_modes_on_spec_programs():
+    """interp and auto share the speculative path; compiled refuses."""
+    prog, arrays, params = programs.get("spmv_ldtrip").make(16)
+    a = simulator.simulate(
+        prog, arrays, params, speculation="auto", trace_mode="auto"
+    )
+    b = simulator.simulate(
+        prog, arrays, params, speculation="auto", trace_mode="interp"
+    )
+    assert a.cycles == b.cycles and a.squashed == b.squashed
+    with pytest.raises(schedlib.TraceCompileError, match="speculative AGU"):
+        simulator.simulate(
+            prog, arrays, params, speculation="auto", trace_mode="compiled"
+        )
+
+
+def test_speculation_auto_is_noop_on_decoupled_programs():
+    prog, arrays, params = programs.get("RAWloop").make(64)
+    assert daelib.decouple(prog, speculation="auto").spec == {}
+    off = simulator.simulate(prog, arrays, params)
+    auto = simulator.simulate(prog, arrays, params, speculation="auto")
+    assert off.cycles == auto.cycles
+    assert auto.squashed == 0
+    for k in off.arrays:
+        np.testing.assert_array_equal(off.arrays[k], auto.arrays[k])
+
+
+@pytest.mark.parametrize("name", programs.SPEC_KERNELS)
+def test_executor_runs_spec_kernels(name):
+    from repro.core import executor
+
+    prog, arrays, params = programs.get(name).make(SCALES[name])
+    with pytest.raises(daelib.LossOfDecoupling):
+        executor.execute(prog, arrays, params)
+    ra = executor.execute(prog, arrays, params, speculation="auto")
+    rb = executor.execute(
+        prog, arrays, params, speculation="auto", trace_mode="interp"
+    )
+    oracle = ir.interpret(prog, arrays, params)
+    for k in oracle:
+        np.testing.assert_array_equal(ra.arrays[k], oracle[k])
+    np.testing.assert_array_equal(ra.waves, rb.waves)
+
+
+# ---------------------------------------------------------------------------
+# LossOfDecoupling diagnostics name the consuming statement
+# ---------------------------------------------------------------------------
+
+
+def test_lod_message_names_trip_consumer():
+    prog, arrays, params = programs.get("spmv_ldtrip").make(8)
+    with pytest.raises(
+        daelib.LossOfDecoupling,
+        match=r"trip of loop 'k' depends on protected load\(s\) \['ld_len'\]",
+    ):
+        daelib.decouple(prog)
+
+
+def test_lod_message_names_local_and_its_consumer():
+    prog, arrays, params = programs.get("chase_sum").make(8)
+    with pytest.raises(
+        daelib.LossOfDecoupling,
+        match=(
+            r"AGU local 'cur' \(SetLocal feeding address of op 'ld_nxt'\) "
+            r"depends on protected load\(s\) \['ld_nxt'\]"
+        ),
+    ):
+        daelib.decouple(prog)
+
+
+def test_lod_message_names_address_consumer():
+    loop = ir.Loop("i", ir.Const(4), (
+        ir.Load("ld_a", "x", ir.Var("i")),
+        ir.Load("ld_b", "x", ir.LoadVal("ld_a")),
+    ))
+    prog = ir.Program("addr", loops=(loop,))
+    with pytest.raises(
+        daelib.LossOfDecoupling,
+        match=r"address of op 'ld_b' depends on protected load\(s\) \['ld_a'\]",
+    ):
+        daelib.decouple(prog)
+
+
+def test_cross_pe_load_dependence_always_rejects():
+    prog = ir.Program("xpe", loops=(
+        ir.Loop("i", ir.Const(2), (ir.Load("ld_a", "x", ir.Var("i")),)),
+        ir.Loop("j", ir.Const(2), (
+            ir.Load("ld_b", "x", ir.LoadVal("ld_a")),
+        )),
+    ))
+    # both modes name the real blocker — "off" must not promise an
+    # auto that would just re-reject (the predicted port has to live
+    # in the PE whose AGU consumes it)
+    for mode in ("off", "auto"):
+        with pytest.raises(daelib.LossOfDecoupling, match="cross-PE"):
+            daelib.decouple(prog, speculation=mode)
+
+
+def test_self_bounding_trip_rejects_even_under_auto():
+    from repro.core import executor
+
+    prog = ir.Program("selftrip", loops=(
+        ir.Loop("i", ir.Const(3), (
+            ir.Loop("k", ir.LoadVal("ld_in"), (
+                ir.Load("ld_in", "x", ir.Var("k")),
+            )),
+        )),
+    ))
+    with pytest.raises(daelib.LossOfDecoupling, match="cannot run ahead"):
+        simulator.simulate(prog, {"x": np.zeros(4)}, {}, speculation="auto")
+    # the wave executor raises the same documented rejection
+    with pytest.raises(daelib.LossOfDecoupling, match="cannot run ahead"):
+        executor.execute(prog, {"x": np.zeros(4)}, {}, speculation="auto")
+
+
+def test_unrelated_keyerrors_are_not_masked_as_lod():
+    """A typo'd Read array must surface as a plain KeyError, not be
+    misattributed to the speculation subsystem's auto-reject."""
+    prog = ir.Program("typo", loops=(
+        ir.Loop("i", ir.Const(3), (
+            ir.Load("ld_len", "lens", ir.Var("i")),
+            ir.Loop("k", ir.LoadVal("ld_len"), (
+                ir.Load("ld_x", "x", ir.Read("MISSING", ir.Var("k"))),
+            )),
+        )),
+    ))
+    arrays = {"lens": np.ones(3), "x": np.zeros(4)}
+    with pytest.raises(KeyError, match="MISSING") as exc:
+        simulator.simulate(prog, arrays, {}, speculation="auto")
+    assert not isinstance(exc.value, daelib.LossOfDecoupling)
+
+
+# ---------------------------------------------------------------------------
+# §6 mis-speculation substrate (the contract speculation builds on)
+# ---------------------------------------------------------------------------
+
+
+def _guarded_program(n=8):
+    prog = ir.Program("g", loops=(
+        ir.Loop("i", ir.Param("n", 0, n), (
+            ir.Load("ld_v", "v", ir.Var("i")),
+            ir.Store(
+                "st_v", "v", ir.Var("i"),
+                ir.LoadVal("ld_v") * 2.0,
+                guard=ir.Bin(">", ir.LoadVal("ld_v"), ir.Const(0.0)),
+            ),
+        )),
+    ), params=("n",))
+    v = np.array([1.0, -1.0, 2.0, -2.0, 3.0, -3.0, 4.0, -4.0][:n])
+    return prog, {"v": v}, {"n": n}
+
+
+def test_trace_hook_reports_invalid_stores():
+    """§6: a guarded-false store is reported valid=False, value=None —
+    the request exists even when the effect doesn't."""
+    prog, arrays, params = _guarded_program()
+    rows = []
+    ir.interpret(
+        prog, arrays, params,
+        trace_hook=lambda *a: rows.append(a),
+    )
+    st = [r for r in rows if r[0] == "st_v"]
+    assert len(st) == params["n"]  # every iteration produced a request
+    for i, (_op, addr, is_store, valid, value) in enumerate(st):
+        assert is_store and addr == i
+        if i % 2 == 0:  # positive values: guard holds
+            assert valid and value == arrays["v"][i] * 2.0
+        else:
+            assert valid is False and value is None
+
+
+@pytest.mark.parametrize("engine", ("cycle", "event"))
+def test_engines_preserve_invalid_request_existence(engine):
+    """Both engines keep mis-speculated stores in the request stream:
+    they issue, occupy the pending buffer, ACK without DRAM (Fig. 7)."""
+    prog, arrays, params = _guarded_program()
+    comp = simulator.Compiled(prog, forwarding=False)
+    traces = schedlib.trace_program(prog, comp.dae, arrays, params)
+    n = params["n"]
+    assert traces["st_v"].n_req == n  # AGU emits all requests (§6)
+    p = simulator.SimParams()
+    if engine == "event":
+        eng = engine_event.EventEngine(
+            comp, traces, arrays, params, "FUS1", p
+        )
+        res = eng.run()
+        port = eng.ports["st_v"]
+        assert port.head == port.n == n  # all requests drained
+        assert list(port.valid) == [i % 2 == 0 for i in range(n)]
+    else:
+        eng = simulator.Engine(comp, traces, arrays, params, "FUS1", p)
+        res = eng.run()
+        port = eng.ports["st_v"]
+        assert port.exhausted and not port.pending
+        assert port.acked_count == n
+    # invalid stores never touched DRAM: store DRAM traffic = valid half
+    assert res.dram_requests == n + n // 2
+    oracle = ir.interpret(prog, arrays, params)
+    np.testing.assert_array_equal(res.arrays["v"], oracle["v"])
+
+
+# ---------------------------------------------------------------------------
+# SpecPlan structure
+# ---------------------------------------------------------------------------
+
+
+def test_spec_plan_structure():
+    prog, arrays, params = programs.get("spmv_ldtrip").make(32)
+    dae = daelib.decouple(prog, speculation="auto")
+    assert list(dae.spec) != []
+    spec_out = []
+    traces = schedlib.trace_program(
+        prog, dae, arrays, params, spec_out=spec_out
+    )
+    plan = spec_out[0]
+    assert isinstance(plan, speculate.SpecPlan)
+    # one prediction per trip-load occurrence
+    assert plan.predictions == traces["ld_len"].n_req
+    assert 0 < plan.mispredictions <= plan.predictions
+    assert plan.n_gates == plan.mispredictions == len(plan.phantoms)
+    # epoch tags are non-decreasing along every stream and only ever
+    # point at allocated gates
+    for op_id, g in plan.gates.items():
+        assert len(g) == traces[op_id].n_req
+        assert (np.diff(g) >= 0).all(), op_id
+        assert g.max(initial=-1) < plan.n_gates
+    # trigger/resolve consistency
+    for gid, (op_id, k) in enumerate(plan.triggers):
+        assert plan.resolve_of[op_id][k] == gid
+    # phantom accounting matches the counters and respects the cap
+    total = sum(c for lst in plan.phantoms for (_o, c, _s) in lst)
+    assert total == plan.phantom_requests
+    per_gate_op: dict = {}
+    for gid, lst in enumerate(plan.phantoms):
+        for op_id, c, _s in lst:
+            per_gate_op[(gid, op_id)] = per_gate_op.get((gid, op_id), 0) + c
+    assert all(c <= speculate.RUNAHEAD_CAP for c in per_gate_op.values())
+
+
+def test_perfect_prediction_single_gate():
+    """Uniform row lengths: only the cold-start prediction misses."""
+    prog = ir.Program("uni", loops=(
+        ir.Loop("i", ir.Const(6), (
+            ir.Load("ld_len", "lens", ir.Var("i")),
+            ir.Loop("k", ir.LoadVal("ld_len"), (
+                ir.Load("ld_x", "x", ir.Var("k")),
+            )),
+        )),
+    ))
+    arrays = {"lens": np.full(6, 3.0), "x": np.zeros(8)}
+    dae = daelib.decouple(prog, speculation="auto")
+    spec_out = []
+    schedlib.trace_program(prog, dae, arrays, {}, spec_out=spec_out)
+    plan = spec_out[0]
+    assert plan.predictions == 6
+    assert plan.mispredictions == 1  # 0.0 -> 3.0 cold start only
+    assert plan.phantom_requests == 0  # under-prediction squashes nothing
+
+
+# ---------------------------------------------------------------------------
+# DSE axis
+# ---------------------------------------------------------------------------
+
+
+def test_result_key_folds_speculation_for_decoupled_kernels():
+    from repro import dse
+
+    a = dse.SweepPoint(kernel="RAWloop", scale=32, speculation="off")
+    b = dse.SweepPoint(kernel="RAWloop", scale=32, speculation="auto")
+    assert a.spec_class == b.spec_class == "-"
+    assert a.result_key == b.result_key
+    assert a.point_id != b.point_id  # still distinct requested points
+    # squash_latency is projected out unless the point speculates
+    c = dse.SweepPoint(
+        kernel="RAWloop", scale=32, sim=(("squash_latency", 9),)
+    )
+    assert c.result_key == a.result_key
+    d = dse.SweepPoint(kernel="spmv_ldtrip", scale=32, speculation="auto")
+    e = dse.SweepPoint(
+        kernel="spmv_ldtrip", scale=32, speculation="auto",
+        sim=(("squash_latency", 9),),
+    )
+    assert d.spec_class == "auto"
+    assert d.result_key != e.result_key
+
+
+def test_sweep_matches_standalone_on_spec_kernels():
+    from repro import dse
+
+    spec = dse.SweepSpec(
+        kernels=["spmv_ldtrip", "bfs_front"],
+        scales={"spmv_ldtrip": 16, "bfs_front": 24},
+        modes=("STA", "FUS2"),
+        speculations=("auto",),
+    )
+    res = dse.sweep(spec, validate=True)
+    for pr in res.points:
+        p = pr.point
+        prog, arrays, params = programs.get(p.kernel).make(p.scale)
+        base = simulator.simulate(
+            prog, arrays, params, mode=p.mode, sim=p.sim_params(),
+            engine=p.engine, trace_mode=p.trace_mode,
+            speculation=p.speculation,
+        )
+        assert base.cycles == pr.result.cycles, p
+        assert base.squashed == pr.result.squashed
+        for k in base.arrays:
+            np.testing.assert_array_equal(base.arrays[k], pr.result.arrays[k])
+
+
+# ---------------------------------------------------------------------------
+# TABLE1 freeze (the paper's evaluation set may not silently grow)
+# ---------------------------------------------------------------------------
+
+
+def test_table1_is_frozen_and_registry_superset():
+    assert programs.TABLE1 == (
+        "RAWloop", "WARloop", "WAWloop", "bnn", "pagerank", "fft",
+        "matpower", "hist+add", "tanh+spmv",
+    )
+    assert set(programs.TABLE1) <= set(programs.REGISTRY)
+    # speculative kernels are registered but never in Table 1
+    assert programs.SPEC_KERNELS != ()
+    assert not set(programs.SPEC_KERNELS) & set(programs.TABLE1)
+    for name in programs.TABLE1:
+        assert not programs.REGISTRY[name].speculative
+
+
+# ---------------------------------------------------------------------------
+# random differential (nightly fuzz reuses the hypothesis wrapper)
+# ---------------------------------------------------------------------------
+
+
+def _check_spec_differential(pap):
+    prog, arrays, params = pap
+    dae = daelib.decouple(prog, speculation="auto")
+    assert dae.spec, "generator must produce a speculative PE"
+    with pytest.raises(daelib.LossOfDecoupling):
+        daelib.decouple(prog)
+    oracle = ir.interpret(prog, arrays, params)
+    for engine in ("cycle", "event"):
+        res = simulator.simulate(
+            prog, arrays, params, mode="FUS2", engine=engine,
+            speculation="auto", validate=True,
+        )
+        for k in oracle:
+            np.testing.assert_array_equal(
+                res.arrays[k], oracle[k], err_msg=f"{engine}/{k}"
+            )
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_spec_differential_seeded(seed):
+    _check_spec_differential(
+        strat.random_spec_program(np.random.default_rng(2000 + seed))
+    )
+
+
+if strat.HAVE_HYPOTHESIS:
+    from hypothesis import given
+
+    @given(strat.spec_programs())
+    def test_spec_differential(pap):
+        _check_spec_differential(pap)

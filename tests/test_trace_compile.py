@@ -270,9 +270,12 @@ def test_local_carried_addresses_fall_back(make, offender):
 
 def test_load_dependent_trip_is_detected():
     """A trip fed by a protected load value is loss of decoupling: the
-    decoupling pass rejects the program outright (any trace mode), and
-    the affine classifier independently names the load when handed such
-    a PE directly."""
+    decoupling pass rejects the program outright under the default
+    ``speculation="off"`` (any trace mode), names the consuming loop,
+    and the affine classifier independently names the load when handed
+    such a PE directly. Under ``speculation="auto"`` the same program
+    *runs*, oracle-exact (DESIGN.md §10; the deeper coverage lives in
+    tests/test_speculation.py)."""
     loops = (
         ir.Loop("i", ir.Param("n", 0, 4), (
             ir.Load("ld_n", "bounds", ir.Var("i")),
@@ -284,8 +287,18 @@ def test_load_dependent_trip_is_detected():
     prog = ir.Program("lod", loops=loops, params=("n",))
     arrays = {"bounds": np.ones(4), "x": np.zeros(8)}
     for tm in ("auto", "compiled", "interp"):
-        with pytest.raises(daelib.LossOfDecoupling):
+        with pytest.raises(
+            daelib.LossOfDecoupling, match=r"trip of loop 'k'"
+        ):
             simulator.simulate(prog, arrays, {"n": 4}, trace_mode=tm)
+
+    # regression: the previously-rejected program now runs speculatively
+    oracle = ir.interpret(prog, arrays, {"n": 4})
+    res = simulator.simulate(
+        prog, arrays, {"n": 4}, speculation="auto", validate=True
+    )
+    for k in oracle:
+        np.testing.assert_array_equal(res.arrays[k], oracle[k])
 
     # classifier view, bypassing the decoupling pass
     pe = daelib.PE(id=0, path=(loops[0], loops[0].body[1]))

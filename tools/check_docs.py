@@ -43,6 +43,8 @@ PUBLIC_API = [
     ("repro.core.dae", "decouple"),
     ("repro.core.dae", "record_cu_script"),
     ("repro.core.dae", "ReplayCU"),
+    ("repro.core.speculate", "SpecPlan"),
+    ("repro.core.speculate", "trace_spec_pe"),
     ("repro.core.du", "check_pair_batch"),
     ("repro.core.executor", "execute"),
     ("repro.core.programs", None),
