@@ -1,0 +1,290 @@
+"""Pallas wave-backend benchmark: fused wave-parallel execution of every
+Table-1 kernel (plus the three speculative kernels) vs the sequential
+per-request path on the same hardware route.
+
+Produces the evidence file committed as ``BENCH_PALLAS.json``:
+
+  * per kernel at ``--scale-mult`` x the paper_table1 scales: request
+    count, wave count, wave parallelism (requests / waves — the Fig. 1c
+    cross-loop parallelism the paper's DU extracts by stalling and the
+    wave backend extracts by partitioning), measured wall-clock of the
+    Pallas wave path, and the sequential one-request-per-step baseline
+    (measured over a ``--seq-steps`` prefix and extrapolated —
+    ``seq_extrapolated`` records it; running 100k one-request Pallas
+    steps to completion serves no one),
+  * bit-exactness: final arrays of the wave backend are asserted
+    array-equal against ``simulate()`` (FUS2, event engine) AND the
+    sequential oracle for every kernel,
+  * frontier cross-checks: for the monotonic producer/consumer shapes
+    (the three microbenchmarks and tanh+spmv's §6-guarded producer),
+    per-request waves / forwarded values are *independently*
+    reconstructed through the generalized ``kernels/du_hazard`` /
+    ``kernels/fused_stream`` Pallas kernels and matched against the
+    WavePlan.
+
+``--smoke`` is the tier-1 CI gate: all nine Table-1 kernels (and the
+speculative three) at reduced scales through the real Pallas path
+(interpret mode), both trace modes, oracle-asserted, no JSON.
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/bench_pallas.py \
+        --scale-mult 8 --out BENCH_PALLAS.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import executor, loopir as ir, programs, simulator
+from repro.kernels import wave_exec
+from benchmarks.paper_table1 import SCALES, scaled
+
+# tier-1 smoke scales: small enough that 12 kernels x 2 trace modes of
+# interpret-mode Pallas fit the tier-1 wall-clock budget
+SMOKE_SCALES = {
+    "RAWloop": 256, "WARloop": 256, "WAWloop": 256,
+    "bnn": 16, "pagerank": 24, "fft": 64, "matpower": 16,
+    "hist+add": 256, "tanh+spmv": 96,
+    "spmv_ldtrip": 32, "bfs_front": 64, "chase_sum": 48,
+}
+
+# wave-parallelism bar asserted on the full run: every Table-1 kernel
+# must extract real cross-loop parallelism (matpower's chained SpMV
+# recurrence is the structural floor at ~2x)
+PAR_BAR = 1.5
+# wall-clock bar: interpret-mode step overhead dominates both paths, so
+# the wave path's win tracks its step-count reduction — demand a real
+# speedup only where the partition removes most steps (parallelism >=
+# SPEEDUP_PAR_MIN); near the structural floor demand it not be
+# pathologically slower than one-request-per-step
+SPEEDUP_PAR_MIN = 4.0
+SPEEDUP_FLOOR = 0.5
+
+
+def _op_stream(plan, op_id):
+    """(addr, valid, value, wave) of one op, in program order."""
+    rows = np.nonzero(plan.req_op == plan.op_ids.index(op_id))[0]
+    return (plan.req_addr[rows], plan.req_valid[rows],
+            plan.req_value[rows], plan.req_wave[rows])
+
+
+def frontier_crosschecks(name, plan, arrays, interpret=True):
+    """Independent Pallas-path reconstruction for monotonic shapes.
+
+    Returns the list of checks performed (empty for kernels whose
+    producer streams are not globally monotonic — bnn's per-row-sorted
+    scatter, the CSR kernels).
+    """
+    from repro.kernels.du_hazard.ops import (
+        hazard_frontier, wave_partition,
+    )
+    from repro.kernels.fused_stream.ops import fused_stream, min_lookback
+
+    done = []
+    pairs = {
+        # (producer op, consumer op, hazard side): "right" counts the
+        # equal-address producer — the WAR store *waits for* the load of
+        # its own address, so all three directions merge side="right"
+        "RAWloop": ("st_a", "ld_a", "right"),
+        "WARloop": ("ld_a", "st_a", "right"),
+        "WAWloop": ("st_0", "st_1", "right"),
+    }
+    if name in pairs:
+        src_id, dst_id, side = pairs[name]
+        src_addr, _, _, src_wave = _op_stream(plan, src_id)
+        dst_addr, _, _, dst_wave = _op_stream(plan, dst_id)
+        f = hazard_frontier(
+            jnp.asarray(src_addr), jnp.asarray(dst_addr), side=side,
+            interpret=interpret,
+        )
+        got = wave_partition(f, jnp.asarray(src_wave))
+        np.testing.assert_array_equal(
+            np.asarray(got), dst_wave,
+            err_msg=f"{name}: Pallas frontier waves != WavePlan ({dst_id})",
+        )
+        done.append(f"wave_partition[{side}]({src_id}->{dst_id})")
+    if name == "tanh+spmv":
+        # §6-guarded producer (st_v) forwarding into the SpMV's value
+        # gather (ld_vv): generalized fused_stream with valid bits
+        src_addr, src_valid, src_value, _ = _op_stream(plan, "st_v")
+        dst_addr, _, dst_value, _ = _op_stream(plan, "ld_vv")
+        lb = min_lookback(src_addr)
+        f = hazard_frontier(
+            jnp.asarray(src_addr), jnp.asarray(dst_addr),
+            interpret=interpret,
+        )
+        vals, hits = fused_stream(
+            jnp.asarray(src_addr),
+            jnp.asarray(np.where(src_valid, src_value, 0.0)),
+            f, jnp.asarray(dst_addr),
+            jnp.asarray(arrays["v"]),
+            jnp.asarray(src_valid.astype(np.int32)),
+            lookback=lb, interpret=interpret,
+        )
+        np.testing.assert_allclose(
+            np.asarray(vals), dst_value, atol=1e-12,
+            err_msg="tanh+spmv: guarded forwarding != oracle ld_vv",
+        )
+        assert bool(np.asarray(hits).any()), "no forwards — shape degenerate"
+        done.append(f"fused_stream[valid,lb={lb}](st_v->ld_vv)")
+    return done
+
+
+def run_kernel(name, scale, *, trace_mode="auto", check=True,
+               seq_steps=0):
+    """One kernel through the Pallas wave backend; returns (row, plan)."""
+    bench = programs.get(name)
+    prog, arrays, params = bench.make(scale)
+    spec = "auto" if bench.speculative else "off"
+    oracle = ir.interpret(prog, arrays, params)
+
+    t0 = time.time()
+    plan = executor.build_wave_plan(
+        prog, arrays, params, trace_mode=trace_mode, speculation=spec,
+    )
+    t_plan = time.time() - t0
+
+    t0 = time.time()
+    res = wave_exec.run_plan(plan, arrays, interpret=True, check=check)
+    t_wave = time.time() - t0
+
+    for k in oracle:
+        np.testing.assert_array_equal(
+            res.arrays[k], oracle[k],
+            err_msg=f"{name}: wave backend diverged from oracle ({k})",
+        )
+    sim = simulator.simulate(prog, arrays, params, mode="FUS2",
+                             engine="event", speculation=spec)
+    for k in sim.arrays:
+        np.testing.assert_array_equal(
+            res.arrays[k], sim.arrays[k],
+            err_msg=f"{name}: wave backend diverged from simulate() ({k})",
+        )
+
+    row = {
+        "scale": scale,
+        "speculative": bench.speculative,
+        "trace_mode": trace_mode,
+        "n_requests": plan.stats.n_requests,
+        "n_waves": plan.stats.n_waves,
+        "parallelism": round(plan.stats.parallelism, 2),
+        "plan_wall_s": round(t_plan, 3),
+        "wave_wall_s": round(t_wave, 3),
+        "pallas_steps": res.n_steps,
+    }
+    if seq_steps:
+        limit = min(seq_steps, plan.stats.n_requests)
+        seq = wave_exec.run_sequential(
+            plan, arrays, interpret=True, check=False, max_steps=limit,
+        )
+        per_step = seq.elapsed / max(seq.n_steps, 1)
+        row["seq_wall_s"] = round(per_step * plan.stats.n_requests, 3)
+        row["seq_extrapolated"] = not seq.complete
+        row["seq_steps_measured"] = seq.n_steps
+        row["speedup_vs_sequential"] = round(
+            row["seq_wall_s"] / max(t_wave, 1e-9), 2
+        )
+    return row, plan, arrays
+
+
+def smoke():
+    """Tier-1 CI smoke: every Table-1 + speculative kernel through the
+    Pallas wave backend at SMOKE_SCALES, oracle-asserted; Table-1 also
+    runs the compiled trace mode and pins identical waves."""
+    for name in programs.TABLE1:
+        row, plan, arrays = run_kernel(name, SMOKE_SCALES[name],
+                                       trace_mode="interp")
+        row_c, plan_c, _ = run_kernel(name, SMOKE_SCALES[name],
+                                      trace_mode="compiled")
+        np.testing.assert_array_equal(
+            plan.req_wave, plan_c.req_wave,
+            err_msg=f"{name}: waves diverged across trace modes",
+        )
+        checks = frontier_crosschecks(name, plan, arrays)
+        print(f"{name:12s} smoke OK: waves={row['n_waves']} "
+              f"par={row['parallelism']}x"
+              + (f" [{', '.join(checks)}]" if checks else ""), flush=True)
+    for name in programs.SPEC_KERNELS:
+        row, _, _ = run_kernel(name, SMOKE_SCALES[name], trace_mode="auto")
+        print(f"{name:12s} smoke OK: waves={row['n_waves']} "
+              f"par={row['parallelism']}x (speculative)", flush=True)
+    n = len(programs.TABLE1) + len(programs.SPEC_KERNELS)
+    print(f"smoke OK: {n} kernels through the Pallas wave backend")
+
+
+def bench(scale_mult: int = 8, seq_steps: int = 256) -> dict:
+    out: dict = {"scale_mult": scale_mult, "seq_steps": seq_steps,
+                 "scales_1x": dict(SCALES), "kernels": {}}
+    scales = scaled(scale_mult)
+    for name in programs.TABLE1:
+        row, plan, arrays = run_kernel(
+            name, scales[name], check=False, seq_steps=seq_steps,
+        )
+        row["crosschecks"] = frontier_crosschecks(name, plan, arrays)
+        out["kernels"][name] = row
+        seq = (f" vs seq ~{row['seq_wall_s']}s" if "seq_wall_s" in row
+               else "")
+        print(f"{name:12s} @{row['scale']}: {row['n_requests']} req in "
+              f"{row['n_waves']} waves ({row['parallelism']}x), wave "
+              f"{row['wave_wall_s']}s{seq}", flush=True)
+    for name in programs.SPEC_KERNELS:
+        scale = programs.get(name).default_scale * scale_mult
+        row, plan, arrays = run_kernel(
+            name, scale, check=False, seq_steps=seq_steps,
+        )
+        out["kernels"][name] = row
+        print(f"{name:12s} @{scale}: {row['n_requests']} req in "
+              f"{row['n_waves']} waves ({row['parallelism']}x)", flush=True)
+    return out
+
+
+def check_bar(data: dict) -> None:
+    for name in programs.TABLE1:
+        row = data["kernels"][name]
+        assert row["parallelism"] >= PAR_BAR, (
+            f"{name}: wave parallelism {row['parallelism']} below the "
+            f"{PAR_BAR}x bar"
+        )
+        # absent when run with --seq-steps 0 (no baseline measured)
+        speedup = row.get("speedup_vs_sequential")
+        if speedup is None:
+            continue
+        bar = 1.0 if row["parallelism"] >= SPEEDUP_PAR_MIN else SPEEDUP_FLOOR
+        assert speedup > bar, (
+            f"{name}: wave wall-clock speedup {speedup} below the "
+            f"{bar}x bar (parallelism {row['parallelism']})"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_PALLAS.json")
+    ap.add_argument("--scale-mult", type=int, default=8)
+    ap.add_argument("--seq-steps", type=int, default=256,
+                    help="sequential-baseline steps measured before "
+                    "extrapolating")
+    ap.add_argument("--no-assert", action="store_true")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tier-1 CI smoke: reduced scales, oracle-asserted, no JSON",
+    )
+    a = ap.parse_args()
+    if a.smoke:
+        smoke()
+        return
+    data = bench(scale_mult=a.scale_mult, seq_steps=a.seq_steps)
+    if not a.no_assert:
+        check_bar(data)
+    with open(a.out, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    pars = {k: v["parallelism"] for k, v in data["kernels"].items()}
+    print(f"wrote {a.out}: wave parallelism {pars}")
+
+
+if __name__ == "__main__":
+    main()

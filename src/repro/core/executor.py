@@ -21,20 +21,33 @@ searches):
     (DAE value chain), approximated PE-locally by "store depends on the
     most recent loads of its PE".
 
-``execute`` returns the final memory state (bit-identical to the
-sequential oracle) plus wave statistics; ``frontier_merge`` is the
-vectorized monotonic-streams primitive shared with the Pallas kernels
-and the MoE dispatch path.
+The module is split along the backend seam (DESIGN.md §2):
+
+  * ``build_wave_plan`` runs the AGU/CU front-end once and emits a
+    **WavePlan** — the complete backend-consumable partition: per
+    request the op id, array-local and flat address, kind, §6 valid
+    bit, wave id and per-op ordinal, plus the ``core/optable`` compute
+    bodies with their captured environment streams and dep alignment
+    maps. A backend needs nothing else: no oracle callbacks, no IR
+    walking.
+  * ``execute`` drives a plan through a backend: ``backend="numpy"``
+    (default) is the in-process reference replay below;
+    ``backend="pallas"`` hands the same plan to
+    ``repro.kernels.wave_exec`` which executes every wave as a Pallas
+    gather→compute→scatter step. Both must produce arrays bit-identical
+    to the sequential oracle.
+
+``frontier_merge`` is the vectorized monotonic-streams primitive shared
+with the Pallas kernels and the MoE dispatch path.
 
 ``trace_mode`` (default ``"auto"``) selects where the program-order
 request stream's op ids / addresses / kinds come from: the AGU trace
 compiler (``schedule.trace_program``) plus one lexsort of polyhedral
-2d+1 keys, with the oracle walk supplying the value/valid stream;
-``"interp"`` keeps the original pure-hook path. The oracle walk runs in
-full either way (store values ARE execution), so the trace-driven path
-is not a speedup — it is the conformance-bearing route that exercises
-the compiled front-end's global request ordering end to end, validated
-against the oracle by pass-3's replay assertion.
+2d+1 keys, with the oracle walk supplying the reference value/valid
+stream; ``"interp"`` keeps the original pure-hook path. The oracle walk
+runs in full either way — backends *compute* store values through the
+op tables, and the walk's values are the per-request reference that
+pins any divergence to the first offending request.
 """
 
 from __future__ import annotations
@@ -45,6 +58,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import loopir as ir
+from repro.core import optable as optablelib
 
 
 @dataclasses.dataclass
@@ -59,10 +73,67 @@ class WaveStats:
 
 
 @dataclasses.dataclass
+class WavePlan:
+    """Backend contract for fused wave execution (DESIGN.md §2).
+
+    Request streams are in program order. Guarantees a backend may rely
+    on (checked by ``validate_plan`` / tests/test_pallas_parity.py):
+
+      1. waves topologically order the exact dependences — same-address
+         RAW/WAR/WAW (invalid §6 stores occupy wave slots too) and the
+         PE dataflow edge (a store is in a strictly later wave than
+         every load request feeding its compute body),
+      2. intra-wave conflict-freedom — within one wave no two requests
+         touch the same flat address unless both are loads, so a
+         backend may gather all of a wave's loads and scatter all of
+         its valid stores in any intra-wave order,
+      3. ``dep_maps[s][l][k]`` is the ordinal of the ``l`` request whose
+         value the ``k``-th ``s`` request consumes (-1 iff that request
+         is guard-invalid and the load never fired before it — the row
+         is masked by the valid bit),
+      4. ``req_valid``/``req_value`` are *reference* streams from the
+         oracle walk: a backend recomputes valid bits from the op-table
+         guards and load/store values from its own gathers; the
+         reference exists to pin the first divergence, not to execute.
+    """
+
+    program: ir.Program
+    params: dict[str, int]
+    # per-op metadata (op order = program.mem_ops order)
+    op_ids: list[str]
+    op_array: dict[str, str]
+    op_is_store: dict[str, bool]
+    op_nreq: dict[str, int]
+    # per-request streams (program order)
+    req_op: np.ndarray  # (n,) int32 index into op_ids
+    req_addr: np.ndarray  # (n,) int64 array-local address
+    req_flat: np.ndarray  # (n,) int64 flat-memory address
+    req_store: np.ndarray  # (n,) bool
+    req_valid: np.ndarray  # (n,) bool   (reference, see contract 4)
+    req_value: np.ndarray  # (n,) float64 (reference; NaN for invalid)
+    req_wave: np.ndarray  # (n,) int64
+    req_ordinal: np.ndarray  # (n,) int64 k-th request of its own op
+    # compute bodies (core/optable) + captured operand streams
+    tables: dict[str, optablelib.StoreTable]
+    env: dict[str, list[np.ndarray]]  # store op -> per-slot streams
+    dep_maps: dict[str, dict[str, np.ndarray]]  # store op -> load op -> map
+    # flat protected-memory layout
+    array_order: list[str]
+    base: dict[str, int]
+    mem_size: int
+    stats: WaveStats = None
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.req_op)
+
+
+@dataclasses.dataclass
 class ExecResult:
     arrays: dict[str, np.ndarray]
     stats: WaveStats
     waves: np.ndarray  # per-request wave index, in program order
+    plan: Optional[WavePlan] = None
 
 
 def frontier_merge(src_addr: np.ndarray, dst_addr: np.ndarray) -> np.ndarray:
@@ -131,16 +202,22 @@ def _trace_stream(
     )
 
 
-def execute(
+def build_wave_plan(
     program: ir.Program,
     arrays: dict[str, np.ndarray],
     params: Optional[dict[str, int]] = None,
     trace_mode: str = "auto",
     speculation: str = "off",
-) -> ExecResult:
-    """Wave-partitioned fused execution, validated against the oracle by
-    construction: effects are applied in oracle order inside each wave,
-    and conflicting requests never share a wave.
+) -> WavePlan:
+    """Run the AGU/CU front-end and emit the backend-consumable plan.
+
+    One hooked oracle walk supplies (a) the reference value/valid
+    streams, (b) the op-table environment slots via the ``aux_exprs``
+    interpreter hook, (c) the dep alignment maps (most recent request
+    of each feeding load at every store request), and — for speculative
+    programs — (d) the load streams the run-ahead AGU predicts against.
+    ``trace_mode != "interp"`` additionally builds op/addr/kind streams
+    through the trace compiler and asserts they agree with the walk.
 
     ``speculation="auto"`` admits loss-of-decoupling programs
     (load-dependent trips/addresses, DESIGN.md §10): the wave partition
@@ -153,63 +230,108 @@ def execute(
 
     dae = daelib.decouple(program, speculation=speculation)
     op_pe = dae.op_to_pe
+    # the flat image and the op-table closures compute in f64; a
+    # narrower protected array would make the oracle round every store
+    # to the array dtype and the backends diverge in the last ulp —
+    # reject it up front instead of tripping a divergence assert deep
+    # in the wave loop (unprotected Read arrays may be any dtype)
+    for arr in sorted({op.array for op, _ in program.mem_ops()}):
+        if arrays[arr].dtype != np.float64:
+            raise ValueError(
+                f"wave executor requires float64 protected arrays: "
+                f"'{arr}' is {arrays[arr].dtype}"
+            )
+    tables = optablelib.compile_store_tables(program)
+    aux_exprs = {
+        op_id: t.env_exprs for op_id, t in tables.items() if t.env_exprs
+    }
 
-    def interpret_hooked(hook):
-        if dae.spec:
-            # speculative programs get the documented auto-reject
-            # (DESIGN.md §10) through the shared conversion site
-            from repro.core import speculate
+    # --- pass 1: hooked oracle walk (reference + CU operand capture) -----
+    per_op_vv: dict[str, list[tuple[bool, Optional[float]]]] = {}
+    load_streams: dict[str, list[float]] = {}
+    env_rows: dict[str, list[tuple]] = {op_id: [] for op_id in aux_exprs}
+    dep_rows: dict[str, dict[str, list[int]]] = {
+        op_id: {ld: [] for ld in t.deps} for op_id, t in tables.items()
+    }
+    counts: dict[str, int] = {}
+    interp_stream: list[tuple[str, int, bool]] = []
 
-            speculate.interpret_hooked(program, arrays, params, hook)
+    def aux_hook(op_id, values):
+        env_rows[op_id].append(values)
+
+    def hook(op_id, addr, is_store, valid, value):
+        per_op_vv.setdefault(op_id, []).append((valid, value))
+        if is_store:
+            for ld, rows in dep_rows[op_id].items():
+                rows.append(counts.get(ld, 0) - 1)
         else:
-            ir.interpret(program, arrays, params, trace_hook=hook)
-
-    # --- pass 1: program-order request stream ----------------------------
-    # op/addr/kind from the trace compiler (trace_mode != "interp");
-    # value/valid always from the oracle walk — values are execution.
-    if trace_mode != "interp":
-        per_op_vv: dict[str, list[tuple[bool, Optional[float]]]] = {}
-        load_streams: dict[str, list[float]] = {}
-
-        def hook(op_id, addr, is_store, valid, value):
-            per_op_vv.setdefault(op_id, []).append((valid, value))
-            if not is_store and dae.spec:
+            counts[op_id] = counts.get(op_id, 0) + 1
+            if dae.spec:
                 # only the speculative AGU consumes the load streams
                 load_streams.setdefault(op_id, []).append(value)
+        if trace_mode == "interp":
+            interp_stream.append((op_id, addr, is_store))
 
-        interpret_hooked(hook)
-        req_op, req_addr, req_store = _trace_stream(
+    if dae.spec:
+        # speculative programs get the documented auto-reject
+        # (DESIGN.md §10) through the shared conversion site
+        from repro.core import speculate
+
+        speculate.interpret_hooked(
+            program, arrays, params, hook,
+            aux_exprs=aux_exprs, aux_hook=aux_hook,
+        )
+    else:
+        ir.interpret(
+            program, arrays, params, trace_hook=hook,
+            aux_exprs=aux_exprs, aux_hook=aux_hook,
+        )
+
+    if trace_mode != "interp":
+        req_op_l, req_addr_l, req_store_l = _trace_stream(
             program, dae, arrays, params, trace_mode,
             oracle_loads=load_streams if dae.spec else None,
         )
         n_oracle = sum(len(v) for v in per_op_vv.values())
-        assert n_oracle == len(req_op), (
-            f"trace stream has {len(req_op)} requests, oracle walk "
+        assert n_oracle == len(req_op_l), (
+            f"trace stream has {len(req_op_l)} requests, oracle walk "
             f"{n_oracle} — trace compiler divergence"
         )
-        taken: dict[str, int] = {}
-        req_valid: list[bool] = []
-        req_value: list[Optional[float]] = []
-        for op_id in req_op:
-            i = taken.get(op_id, 0)
-            taken[op_id] = i + 1
-            valid, value = per_op_vv[op_id][i]
-            req_valid.append(valid)
-            req_value.append(value)
     else:
-        req_op, req_addr, req_store = [], [], []
-        req_valid, req_value = [], []
+        req_op_l = [r[0] for r in interp_stream]
+        req_addr_l = [r[1] for r in interp_stream]
+        req_store_l = [r[2] for r in interp_stream]
 
-        def hook(op_id, addr, is_store, valid, value):
-            req_op.append(op_id)
-            req_addr.append(addr)
-            req_store.append(is_store)
-            req_valid.append(valid)
-            req_value.append(value)
+    n = len(req_op_l)
+    op_index = {op.id: i for i, (op, _) in enumerate(program.mem_ops())}
+    op_ids = [op.id for op, _ in program.mem_ops()]
+    op_array = {op.id: op.array for op, _ in program.mem_ops()}
+    op_is_store = {op.id: op.is_store for op, _ in program.mem_ops()}
 
-        interpret_hooked(hook)
+    req_op = np.fromiter(
+        (op_index[o] for o in req_op_l), dtype=np.int32, count=n
+    )
+    req_addr = np.asarray(req_addr_l, dtype=np.int64) if n else np.zeros(
+        0, dtype=np.int64
+    )
+    req_store = np.asarray(req_store_l, dtype=bool) if n else np.zeros(
+        0, dtype=bool
+    )
 
-    n = len(req_op)
+    # per-op ordinal + the (valid, value) reference streams, by ordinal
+    req_ordinal = np.zeros(n, dtype=np.int64)
+    req_valid = np.zeros(n, dtype=bool)
+    req_value = np.full(n, np.nan, dtype=np.float64)
+    taken: dict[str, int] = {}
+    for i in range(n):
+        o = req_op_l[i]
+        k = taken.get(o, 0)
+        taken[o] = k + 1
+        req_ordinal[i] = k
+        valid, value = per_op_vv[o][k]
+        req_valid[i] = valid
+        if value is not None:
+            req_value[i] = value
 
     # --- pass 2: wave assignment (one program-order sweep) ---------------
     waves = np.zeros(n, dtype=np.int64)
@@ -218,18 +340,16 @@ def execute(
     loads_since_store: dict[tuple[str, int], int] = {}
     # per PE: max wave of recent loads (dataflow into store values)
     pe_load_wave: dict[int, int] = {}
-    op_array = {op.id: op.array for op, _ in program.mem_ops()}
 
     for i in range(n):
-        key = (op_array[req_op[i]], req_addr[i])
-        w = 0
+        key = (op_array[req_op_l[i]], req_addr_l[i])
         if req_store[i]:
             # WAW: after last store; WAR: after every load since it;
             # dataflow: after this PE's recent loads (value availability)
             w = max(
                 last_store_wave.get(key, -1) + 1,
                 loads_since_store.get(key, -1) + 1,
-                pe_load_wave.get(op_pe[req_op[i]], -1) + 1,
+                pe_load_wave.get(op_pe[req_op_l[i]], -1) + 1,
             )
             if req_valid[i]:
                 last_store_wave[key] = w
@@ -242,39 +362,281 @@ def execute(
             # RAW: after the last store to this address
             w = last_store_wave.get(key, -1) + 1
             loads_since_store[key] = max(loads_since_store.get(key, -1), w)
-            pe = op_pe[req_op[i]]
+            pe = op_pe[req_op_l[i]]
             pe_load_wave[pe] = max(pe_load_wave.get(pe, -1), w)
         waves[i] = w
 
     n_waves = int(waves.max()) + 1 if n else 0
 
-    # --- pass 3: wave-ordered replay (validation by construction) --------
-    # Within a wave: all loads first (conflict-freedom guarantees no
-    # same-address store in the same wave), then all stores.
-    out = {k: np.array(v, copy=True) for k, v in arrays.items()}
-    order = np.argsort(waves, kind="stable")
-    got_loads: dict[int, float] = {}
-    pos = 0
-    for w in range(n_waves):
-        # gather this wave's request indices (order is wave-major, stable)
-        batch = []
-        while pos < len(order) and waves[order[pos]] == w:
-            batch.append(int(order[pos]))
-            pos += 1
-        for i in batch:
-            if not req_store[i]:
-                got_loads[i] = float(out[op_array[req_op[i]]][req_addr[i]])
-        for i in batch:
-            if req_store[i] and req_valid[i]:
-                out[op_array[req_op[i]]][req_addr[i]] = req_value[i]
+    # --- flat protected-memory layout ------------------------------------
+    protected = sorted({op_array[o] for o in op_ids})
+    base: dict[str, int] = {}
+    off = 0
+    for a in protected:
+        base[a] = off
+        off += len(arrays[a])
+    op_base = np.asarray(
+        [base[op_array[o]] for o in op_ids], dtype=np.int64
+    ) if op_ids else np.zeros(0, dtype=np.int64)
+    req_flat = (op_base[req_op] + req_addr) if n else req_addr.copy()
 
-    # loads must have observed oracle values
-    for i in range(n):
-        if not req_store[i]:
-            assert np.isclose(got_loads[i], req_value[i], atol=1e-9), (
-                f"wave executor divergence at request {i} ({req_op[i]}, "
-                f"addr {req_addr[i]}): got {got_loads[i]}, oracle {req_value[i]}"
-            )
+    env = {
+        op_id: [
+            np.asarray([row[k] for row in rows])
+            for k in range(len(aux_exprs[op_id]))
+        ]
+        for op_id, rows in env_rows.items()
+    }
+    dep_maps = {
+        op_id: {ld: np.asarray(rows, dtype=np.int64)
+                for ld, rows in per_ld.items()}
+        for op_id, per_ld in dep_rows.items()
+    }
+    op_nreq = {o: len(per_op_vv.get(o, ())) for o in op_ids}
 
     stats = WaveStats(n_requests=n, n_waves=n_waves, sequential_depth=n)
-    return ExecResult(arrays=out, stats=stats, waves=waves)
+    return WavePlan(
+        program=program, params=dict(params),
+        op_ids=op_ids, op_array=op_array, op_is_store=op_is_store,
+        op_nreq=op_nreq,
+        req_op=req_op, req_addr=req_addr, req_flat=req_flat,
+        req_store=req_store, req_valid=req_valid, req_value=req_value,
+        req_wave=waves, req_ordinal=req_ordinal,
+        tables=tables, env=env, dep_maps=dep_maps,
+        array_order=protected, base=base, mem_size=off,
+        stats=stats,
+    )
+
+
+def wave_store_inputs(
+    plan: WavePlan, op_id: str, rows: np.ndarray,
+    lv_streams: dict[str, np.ndarray],
+) -> tuple[dict[str, np.ndarray], list[np.ndarray], int]:
+    """Gather the op-table operands for the given requests of one store.
+
+    ``rows`` are global request indices (all of op ``op_id``);
+    ``lv_streams`` are the per-load-op value streams the backend has
+    produced so far (waves strictly before the current one — WavePlan
+    contract 1 guarantees they are filled). Returns (dep value arrays,
+    env slot arrays, n) ready for ``StoreTable.eval_value/eval_guard``.
+    """
+    table = plan.tables[op_id]
+    k = plan.req_ordinal[rows]
+    deps: dict[str, np.ndarray] = {}
+    for ld in table.deps:
+        m = plan.dep_maps[op_id][ld][k]
+        # -1 = guard-invalid row whose feeding load never fired; clip —
+        # the garbage value is masked by the valid bit (contract 3)
+        deps[ld] = lv_streams[ld][np.clip(m, 0, None)]
+    env = [plan.env[op_id][s][k] for s in range(len(table.env_exprs))]
+    return deps, env, len(rows)
+
+
+def validate_plan(plan: WavePlan) -> None:
+    """Assert the WavePlan contract (docstring items 1–3) vectorized.
+
+    Cheap enough to run in tests on every kernel; backends may call it
+    defensively before executing an externally produced plan.
+    """
+    waves, n = plan.req_wave, plan.n_requests
+    # 2. intra-wave conflict-freedom: (wave, flat addr) pairs involving
+    # a store are unique
+    key = waves * max(plan.mem_size, 1) + plan.req_flat
+    touched = key[plan.req_store]
+    assert len(np.unique(touched)) == len(touched), (
+        "two stores share (wave, address)"
+    )
+    load_keys = set(np.unique(key[~plan.req_store]).tolist())
+    for kk in touched.tolist():
+        assert kk not in load_keys, "load and store share (wave, address)"
+    # 1+3. every store is strictly after the loads feeding it
+    lv_wave: dict[str, np.ndarray] = {}
+    for op_id, is_store in plan.op_is_store.items():
+        if not is_store:
+            rows = np.nonzero(plan.req_op == plan.op_ids.index(op_id))[0]
+            w = np.zeros(plan.op_nreq[op_id], dtype=np.int64)
+            w[plan.req_ordinal[rows]] = waves[rows]
+            lv_wave[op_id] = w
+    for op_id, per_ld in plan.dep_maps.items():
+        rows = np.nonzero(plan.req_op == plan.op_ids.index(op_id))[0]
+        k = plan.req_ordinal[rows]
+        for ld, m in per_ld.items():
+            mm = m[k]
+            ok = mm >= 0
+            assert np.all(
+                waves[rows][ok] > lv_wave[ld][mm[ok]]
+            ), f"store {op_id} not strictly after its {ld} inputs"
+            # -1 rows must be guard-invalid (contract 3)
+            assert np.all(plan.req_valid[rows][~ok] == False)  # noqa: E712
+    assert n == 0 or int(waves.max()) + 1 == plan.stats.n_waves
+
+
+def drive_plan(
+    plan: WavePlan,
+    mem_step,
+    *,
+    frozen: dict[str, np.ndarray],
+    wave_of: Optional[np.ndarray] = None,
+    n_waves: Optional[int] = None,
+    lib: str = "np",
+    check: bool = True,
+    max_steps: Optional[int] = None,
+) -> tuple[int, bool]:
+    """Shared wave-loop driver for every backend.
+
+    Owns everything that must stay identical across backends — wave
+    batching, op-table compute (store values + §6 valid bits from
+    *earlier* waves' gathers, contract 1), dep/load-stream bookkeeping,
+    and the request-exact divergence checks — and delegates only the
+    memory move: ``mem_step(flat_addr, write_mask, store_vals) ->
+    gathered f64 values per lane`` over whatever image the backend
+    keeps (a numpy array here, a Pallas-resident uint32 image in
+    ``kernels/wave_exec``). ``wave_of``/``n_waves`` default to the
+    plan's partition; pass one wave per request for the sequential
+    baseline. Returns (steps taken, ran to completion).
+    """
+    if wave_of is None:
+        wave_of = plan.req_wave
+        n_waves = plan.stats.n_waves
+    lv_streams = {
+        op_id: np.zeros(plan.op_nreq[op_id], dtype=np.float64)
+        for op_id, s in plan.op_is_store.items() if not s
+    }
+    order = np.argsort(wave_of, kind="stable")
+    bounds = np.searchsorted(wave_of[order], np.arange(n_waves + 1))
+    steps = 0
+    for w in range(n_waves):
+        if max_steps is not None and steps >= max_steps:
+            return steps, False
+        batch = order[bounds[w]:bounds[w + 1]]
+        store_sel = np.nonzero(plan.req_store[batch])[0]
+        stores = batch[store_sel]
+        # compute: store values/valid from op tables (deps are filled —
+        # contract 1). Grouped per op for vectorized closure eval.
+        sval = np.zeros(len(batch), dtype=np.float64)
+        write = np.zeros(len(batch), dtype=bool)
+        for op_i in np.unique(plan.req_op[stores]):
+            sel = store_sel[plan.req_op[stores] == op_i]
+            rows = batch[sel]
+            op_id = plan.op_ids[op_i]
+            deps, env, nn = wave_store_inputs(plan, op_id, rows, lv_streams)
+            v = plan.tables[op_id].eval_value(deps, env, frozen, nn, lib=lib)
+            g = plan.tables[op_id].eval_guard(deps, env, frozen, nn, lib=lib)
+            v, g = np.asarray(v, dtype=np.float64), np.asarray(g)
+            if check:
+                np.testing.assert_array_equal(
+                    g, plan.req_valid[rows],
+                    err_msg=f"op-table guard diverged from oracle valid "
+                    f"bits on {op_id}",
+                )
+                np.testing.assert_array_equal(
+                    v[g], plan.req_value[rows][g],
+                    err_msg=f"op-table store values diverged from oracle "
+                    f"on {op_id}",
+                )
+            sval[sel] = np.where(g, v, 0.0)
+            write[sel] = g
+        got = mem_step(plan.req_flat[batch], write, sval)
+        steps += 1
+        # collect this wave's load values into the per-op streams
+        load_sel = ~plan.req_store[batch]
+        loads = batch[load_sel]
+        if len(loads):
+            got_loads = np.asarray(got, dtype=np.float64)[load_sel]
+            if check:
+                np.testing.assert_array_equal(
+                    got_loads, plan.req_value[loads],
+                    err_msg="backend gather diverged from oracle loads",
+                )
+            for op_i in np.unique(plan.req_op[loads]):
+                m = plan.req_op[loads] == op_i
+                lv_streams[plan.op_ids[op_i]][
+                    plan.req_ordinal[loads[m]]
+                ] = got_loads[m]
+    return steps, True
+
+
+def flat_image(plan: WavePlan, arrays: dict[str, np.ndarray]) -> np.ndarray:
+    """The flat f64 protected-memory image a backend executes against."""
+    mem = np.zeros(max(plan.mem_size, 1), dtype=np.float64)
+    for a in plan.array_order:
+        mem[plan.base[a]:plan.base[a] + len(arrays[a])] = arrays[a]
+    return mem
+
+
+def unpack_image(
+    plan: WavePlan, mem: np.ndarray, arrays: dict[str, np.ndarray]
+) -> dict[str, np.ndarray]:
+    """Final array dict from a flat image (unprotected arrays copied)."""
+    out = {k: np.array(v, copy=True) for k, v in arrays.items()}
+    for a in plan.array_order:
+        out[a] = mem[plan.base[a]:plan.base[a] + len(arrays[a])].copy()
+    return out
+
+
+def _replay_numpy(plan: WavePlan, arrays: dict[str, np.ndarray]):
+    """Reference wave backend: the shared driver over a numpy image.
+
+    Identical to the Pallas backend minus the kernel — same driver,
+    same op-table compute, same flat image; the memory step is a numpy
+    gather + masked scatter. Every §6 valid bit, store value and
+    gathered load is pinned request-exact against the oracle reference
+    streams — "validated by construction": effects apply in wave order
+    and conflicting requests never share a wave, so agreement proves
+    the partition, dep maps and compute bodies together reproduce
+    sequential semantics.
+    """
+    mem = flat_image(plan, arrays)
+
+    def mem_step(addr, write, sval):
+        got = mem[addr]  # fancy indexing copies: pre-wave state
+        mem[addr[write]] = sval[write]
+        return got
+
+    drive_plan(plan, mem_step, frozen=arrays, check=True)
+    return unpack_image(plan, mem, arrays)
+
+
+def execute(
+    program: ir.Program,
+    arrays: dict[str, np.ndarray],
+    params: Optional[dict[str, int]] = None,
+    trace_mode: str = "auto",
+    speculation: str = "off",
+    backend: str = "numpy",
+) -> ExecResult:
+    """Wave-partitioned fused execution of ``program``.
+
+    Builds the ``WavePlan`` (AGU/CU front-end, wave partition, op
+    tables) and drives it through a backend:
+
+      * ``backend="numpy"`` — the reference replay in this module,
+      * ``backend="pallas"`` — ``repro.kernels.wave_exec``: each wave
+        runs as a data-parallel Pallas gather→compute→scatter step over
+        a flat bit-exact memory image (interpret mode on CPU).
+
+    Both compute store values through the op tables and are asserted
+    request-exact against the oracle reference stream; final arrays are
+    bit-identical to ``loopir.interpret`` for every Table-1 kernel in
+    both trace modes (tests/test_pallas_parity.py).
+
+    ``speculation="auto"`` admits loss-of-decoupling programs
+    (load-dependent trips/addresses, DESIGN.md §10): the wave partition
+    works off the *true* post-squash request stream — phantom squash
+    traffic is a DU-timing artifact and has no wave-executor analogue.
+    """
+    plan = build_wave_plan(
+        program, arrays, params, trace_mode=trace_mode,
+        speculation=speculation,
+    )
+    if backend == "numpy":
+        out = _replay_numpy(plan, arrays)
+    elif backend == "pallas":
+        from repro.kernels import wave_exec
+
+        out = wave_exec.run_plan(plan, arrays).arrays
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return ExecResult(
+        arrays=out, stats=plan.stats, waves=plan.req_wave, plan=plan
+    )

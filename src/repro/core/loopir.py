@@ -152,6 +152,11 @@ _UN_FNS: dict[str, Callable] = {
     "exp": np.exp,
 }
 
+# public alias: the numpy ufuncs above are already elementwise, so the
+# oracle's scalar table IS the vectorized table (core/optable's
+# closures use it directly — one source, nothing to keep in sync)
+NP_UN_FNS: dict[str, Callable] = _UN_FNS
+
 
 # vectorized counterparts of _binop, used by the affine trace compiler
 # (core/affine.py); numpy's //, % match Python's semantics on ints and
@@ -457,6 +462,8 @@ def interpret(
     arrays: dict[str, np.ndarray],
     params: Optional[dict[str, int]] = None,
     trace_hook: Optional[Callable] = None,
+    aux_exprs: Optional[dict[str, tuple]] = None,
+    aux_hook: Optional[Callable] = None,
 ) -> dict[str, np.ndarray]:
     """Run the program sequentially; returns the final array state.
 
@@ -469,6 +476,15 @@ def interpret(
     stores (guard false -> valid=False, value=None) — the request exists
     in the decoupled machine even when the effect doesn't (§6).
 
+    ``aux_exprs`` maps an op id to a tuple of extra expressions; when
+    that op fires, each is evaluated in the op's environment and the
+    results are passed to ``aux_hook(op_id, values_tuple)`` *before* the
+    trace hook — for guarded stores the aux values are produced even
+    when the guard fails (the CU-side operand stream exists regardless
+    of the §6 valid bit). This is how ``core/optable`` captures the
+    environment slots of its partially-evaluated compute bodies without
+    leaking memory (LoadVal) values out of the oracle.
+
     Load values are visible downstream of their ``Load`` within the
     enclosing body *and* inside nested loops of that body — including
     loop trip counts and ivar updates. Load-dependent trips (the §6
@@ -479,6 +495,24 @@ def interpret(
     params = params or {}
     arrays = {k: np.array(v, copy=True) for k, v in arrays.items()}
 
+    def run_aux(op_id, env, loadvals, guard_ok=True):
+        # guard-false rows (§6) still need an aux row for per-op
+        # ordinal alignment, but the guard may be the very bounds check
+        # that makes the value operands evaluable — evaluate those
+        # defensively and emit NaN placeholders (the backend masks the
+        # whole row by its recomputed valid bit)
+        if aux_exprs is not None and op_id in aux_exprs:
+            vals = []
+            for e in aux_exprs[op_id]:
+                if guard_ok:
+                    vals.append(_eval(e, env, arrays, params, loadvals))
+                else:
+                    try:
+                        vals.append(_eval(e, env, arrays, params, loadvals))
+                    except Exception:
+                        vals.append(np.nan)
+            aux_hook(op_id, tuple(vals))
+
     def run_body(stmts: Sequence[Stmt], env: _Env, outer_loadvals):
         # chained visibility: loads of enclosing iterations stay readable
         loadvals: dict[str, float] = dict(outer_loadvals)
@@ -486,14 +520,17 @@ def interpret(
             if isinstance(s, Load):
                 a = int(_eval(s.addr, env, arrays, params, loadvals))
                 v = arrays[s.array][a]
+                run_aux(s.id, env, loadvals)
                 if trace_hook is not None:
                     trace_hook(s.id, a, False, True, float(v))
                 loadvals[s.id] = v
             elif isinstance(s, Store):
                 a = int(_eval(s.addr, env, arrays, params, loadvals))
-                if s.guard is not None and not _eval(
+                guard_ok = s.guard is None or _eval(
                     s.guard, env, arrays, params, loadvals
-                ):
+                )
+                run_aux(s.id, env, loadvals, guard_ok=guard_ok)
+                if not guard_ok:
                     if trace_hook is not None:
                         trace_hook(s.id, a, True, False, None)
                     continue

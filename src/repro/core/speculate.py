@@ -140,6 +140,8 @@ def interpret_hooked(
     arrays: dict[str, np.ndarray],
     params: Optional[dict],
     trace_hook,
+    aux_exprs=None,
+    aux_hook=None,
 ) -> dict[str, np.ndarray]:
     """``loopir.interpret`` with the speculative auto-reject applied:
     a load value consumed before it exists even sequentially (e.g. a
@@ -147,9 +149,13 @@ def interpret_hooked(
     ``LossOfDecoupling`` — speculation cannot repair an ill-defined
     program. Other KeyErrors (typo'd array/param names) propagate
     untouched. The single conversion site shared by ``simulate()``
-    (via ``oracle_load_streams``) and ``executor.execute``."""
+    (via ``oracle_load_streams``) and ``executor.execute``.
+    ``aux_exprs``/``aux_hook`` pass through to ``loopir.interpret``."""
     try:
-        return ir.interpret(program, arrays, params or {}, trace_hook=trace_hook)
+        return ir.interpret(
+            program, arrays, params or {}, trace_hook=trace_hook,
+            aux_exprs=aux_exprs, aux_hook=aux_hook,
+        )
     except ir.UnavailableLoadValue as exc:
         raise daelib.LossOfDecoupling(
             f"value {exc} is unavailable at its use point even in the "

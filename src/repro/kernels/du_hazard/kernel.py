@@ -4,18 +4,33 @@ Computes, for every consumer (dst) request, the number of producer (src)
 requests that must commit first. For a *monotonically non-decreasing*
 source address stream — the paper's §3.1 requirement — this is
 
-    frontier[j] = |{ i : src_addr[i] <= dst_addr[j] }|
+    frontier[j] = |{ i : src_addr[i] <= dst_addr[j] }|     (side="right")
+    frontier[j] = |{ i : src_addr[i] <  dst_addr[j] }|     (side="left")
 
 which is exactly the Hazard Safety Check's address disjunct
 (``req.addr_dst < ack.addr_src``) solved for the minimal safe frontier,
 evaluated for the whole stream at once instead of stalling per request.
 
-TPU mapping: the dst stream is tiled over the grid; each program
-iterates the src stream in VMEM-sized blocks, accumulating block-local
+``side="right"`` is the hazard-merge direction for *all three*
+dependency kinds — RAW, WAR and WAW each require the consumer to wait
+for the producer at its own address (a WAR store waits for the
+equal-address load; see the crosschecks in ``benchmarks/bench_pallas.py``).
+``side="left"`` is the strict-precedence variant — producers strictly
+below the address, e.g. a forwarding frontier that must *exclude* the
+equal-address producer itself. It is NOT a WAR merge: used as one it
+under-counts the equal-address load and admits the overwrite a wave
+early.
+
+TPU mapping: one kernel serves both the single-pair and the batched
+shape (K independent (src, dst) stream pairs — e.g. one per protected
+array of a fused program — in one launch; the single-pair wrapper is
+the K=1 row). The grid tiles (stream, dst block); each program iterates
+its stream's src row in VMEM-sized blocks, accumulating block-local
 counts with a broadcast compare + row reduction (VPU work, 8x128-lane
-friendly). No address *history* is materialized — only (block_d, block_s)
-tiles, mirroring how the paper's DU needs only frontier registers, not
-history CAMs.
+friendly). No address *history* is materialized — only
+(block_d, block_s) tiles, mirroring how the paper's DU needs only
+frontier registers, not history CAMs. Streams are length-padded (src
+with +INT_MAX: never counted; dst with -INT_MAX: count 0).
 """
 
 from __future__ import annotations
@@ -27,60 +42,103 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _hazard_kernel(src_ref, dst_ref, out_ref, *, src_len: int, block_s: int):
-    """One dst block vs the whole src stream, block by block."""
-    dst = dst_ref[...]  # (block_d,)
+def _hazard_kernel(src_ref, dst_ref, out_ref, *, src_len: int,
+                   block_s: int, strict: bool):
+    """One (stream k, dst block) tile vs stream k's whole src row."""
+    dst = dst_ref[...][0]  # (block_d,)
     n_sblocks = src_len // block_s
 
     def body(s, acc):
-        blk = jax.lax.dynamic_slice(src_ref[...], (s * block_s,), (block_s,))
-        # count src entries <= each dst element in this src block
-        le = (blk[None, :] <= dst[:, None]).astype(jnp.int32)
+        blk = jax.lax.dynamic_slice(
+            src_ref[...], (0, s * block_s), (1, block_s)
+        )[0]
+        # count src entries <= (or <, side="left") each dst element
+        if strict:
+            le = (blk[None, :] < dst[:, None]).astype(jnp.int32)
+        else:
+            le = (blk[None, :] <= dst[:, None]).astype(jnp.int32)
         return acc + jnp.sum(le, axis=1)
 
     acc = jax.lax.fori_loop(
         0, n_sblocks, body, jnp.zeros(dst.shape, dtype=jnp.int32)
     )
-    out_ref[...] = acc
+    out_ref[...] = acc[None, :]
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "block_s", "interpret"))
-def hazard_frontier(
-    src_addr: jax.Array,
-    dst_addr: jax.Array,
+_BIG = jnp.iinfo(jnp.int32).max
+
+
+@functools.partial(
+    jax.jit, static_argnames=("side", "block_d", "block_s", "interpret")
+)
+def hazard_frontier_batch(
+    src_addr: jax.Array,  # (K, S) int32, each row monotonic
+    dst_addr: jax.Array,  # (K, D) int32
     *,
+    side: str = "right",
     block_d: int = 256,
     block_s: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """Minimal safe src commit count per dst request.
+    """K independent frontier merges in one launch — the multi-array /
+    multi-PE shape of a fused program (module docstring). Returns
+    (K, D) int32 frontiers; padded lanes count 0 by the pad convention.
+    """
+    assert side in ("right", "left"), side
+    assert src_addr.ndim == 2 and dst_addr.ndim == 2
+    assert src_addr.shape[0] == dst_addr.shape[0]
+    k, s = src_addr.shape
+    d = dst_addr.shape[1]
+    s_pad = -s % block_s
+    d_pad = -d % block_d
+    src_p = jnp.pad(src_addr.astype(jnp.int32), ((0, 0), (0, s_pad)),
+                    constant_values=_BIG)
+    dst_p = jnp.pad(dst_addr.astype(jnp.int32), ((0, 0), (0, d_pad)),
+                    constant_values=-_BIG)
+    grid = (k, dst_p.shape[1] // block_d)
+    out = pl.pallas_call(
+        functools.partial(
+            _hazard_kernel, src_len=src_p.shape[1], block_s=block_s,
+            strict=(side == "left"),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, src_p.shape[1]), lambda kk, i: (kk, 0)),
+            pl.BlockSpec((1, block_d), lambda kk, i: (kk, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda kk, i: (kk, i)),
+        out_shape=jax.ShapeDtypeStruct(
+            (k, dst_p.shape[1]), jnp.int32
+        ),
+        interpret=interpret,
+    )(src_p, dst_p)
+    return out[:, :d]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("side", "block_d", "block_s", "interpret")
+)
+def hazard_frontier(
+    src_addr: jax.Array,
+    dst_addr: jax.Array,
+    *,
+    side: str = "right",
+    block_d: int = 256,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Minimal safe src commit count per dst request — the K=1 row of
+    ``hazard_frontier_batch`` (one kernel, two shapes).
 
     src_addr: (S,) int32, monotonically non-decreasing (asserted by the
               compiler's §3 analysis or a §3.3 user annotation).
     dst_addr: (D,) int32, any distribution (consumer monotonicity is NOT
               required — only the source's, exactly as in the paper).
+    side:     "right" merges hazards (RAW/WAR/WAW all wait for the
+              equal-address producer); "left" is the strict-precedence
+              variant (module docstring — not a WAR merge).
     """
-    s, d = src_addr.shape[0], dst_addr.shape[0]
-    s_pad = -s % block_s
-    d_pad = -d % block_d
-    # pad src with +inf (never counted), dst with -inf (count 0)
-    big = jnp.iinfo(jnp.int32).max
-    src_p = jnp.pad(src_addr.astype(jnp.int32), (0, s_pad), constant_values=big)
-    dst_p = jnp.pad(
-        dst_addr.astype(jnp.int32), (0, d_pad), constant_values=-big
-    )
-    grid = (dst_p.shape[0] // block_d,)
-    out = pl.pallas_call(
-        functools.partial(
-            _hazard_kernel, src_len=src_p.shape[0], block_s=block_s
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((src_p.shape[0],), lambda i: (0,)),  # full src in VMEM
-            pl.BlockSpec((block_d,), lambda i: (i,)),
-        ],
-        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((dst_p.shape[0],), jnp.int32),
-        interpret=interpret,
-    )(src_p, dst_p)
-    return out[:d]
+    return hazard_frontier_batch(
+        src_addr[None, :], dst_addr[None, :], side=side,
+        block_d=block_d, block_s=block_s, interpret=interpret,
+    )[0]

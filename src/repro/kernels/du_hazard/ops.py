@@ -1,7 +1,13 @@
 """Public jit'd wrappers for the du_hazard kernel.
 
-``hazard_frontier`` — Pallas kernel (TPU target; interpret=True on CPU).
-``hazard_frontier_ref`` — pure-jnp oracle.
+``hazard_frontier`` — Pallas kernel (TPU target; interpret=True on CPU),
+with ``side`` selecting the hazard merge ("right": RAW/WAR/WAW — all
+wait for the equal-address producer) vs the strict-precedence variant
+("left"; kernel module docstring).
+``hazard_frontier_batch`` — K independent stream pairs in one launch
+(the multi-array shape of a fused program).
+``hazard_frontier_ref`` / ``hazard_frontier_batch_ref`` — pure-jnp
+oracles.
 ``wave_partition`` — composition used by the fused executor / MoE path:
 given per-pair frontiers, assign each consumer request the earliest wave
 in which all its producers have committed.
@@ -10,10 +16,22 @@ in which all its producers have committed.
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.du_hazard.kernel import hazard_frontier
-from repro.kernels.du_hazard.ref import hazard_frontier_ref
+from repro.kernels.du_hazard.kernel import (
+    hazard_frontier,
+    hazard_frontier_batch,
+)
+from repro.kernels.du_hazard.ref import (
+    hazard_frontier_batch_ref,
+    hazard_frontier_ref,
+)
 
-__all__ = ["hazard_frontier", "hazard_frontier_ref", "wave_partition"]
+__all__ = [
+    "hazard_frontier",
+    "hazard_frontier_batch",
+    "hazard_frontier_ref",
+    "hazard_frontier_batch_ref",
+    "wave_partition",
+]
 
 
 @jax.jit

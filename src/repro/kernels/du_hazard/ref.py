@@ -3,13 +3,24 @@
 import jax.numpy as jnp
 
 
-def hazard_frontier_ref(src_addr, dst_addr):
-    """Number of src requests with address <= each dst address.
+def hazard_frontier_ref(src_addr, dst_addr, side: str = "right"):
+    """Number of src requests with address <= (``side="right"``) or <
+    (``side="left"``) each dst address.
 
     Requires src_addr monotonically non-decreasing — then this equals
-    searchsorted(src, dst, 'right'), i.e. the minimal safe frontier of
-    the paper's address disjunct.
+    searchsorted(src, dst, side), i.e. the minimal safe frontier of
+    the paper's address disjunct: "right" is the hazard-merge
+    direction (RAW/WAR/WAW all wait for the equal-address producer),
+    "left" the strict-precedence variant (kernel module docstring).
     """
     return jnp.searchsorted(
-        src_addr.astype(jnp.int32), dst_addr.astype(jnp.int32), side="right"
+        src_addr.astype(jnp.int32), dst_addr.astype(jnp.int32), side=side
     ).astype(jnp.int32)
+
+
+def hazard_frontier_batch_ref(src_addr, dst_addr, side: str = "right"):
+    """Row-wise oracle for ``hazard_frontier_batch`` ((K, S) × (K, D))."""
+    return jnp.stack([
+        hazard_frontier_ref(src_addr[k], dst_addr[k], side=side)
+        for k in range(src_addr.shape[0])
+    ])

@@ -12,15 +12,20 @@ Semantics (matching the DU): for consumer j with address a_j and
 program-order frontier f_j (from du_hazard — the number of producer
 requests preceding it), the value is
 
-    youngest producer i < f_j with addr_i == a_j   -> forwarded value
-    no such producer                               -> memory[a_j]
+    youngest *valid* producer i < f_j with addr_i == a_j -> forwarded
+    no such producer                                     -> memory[a_j]
 
 Monotonic producer addresses make "youngest before the frontier" a
-bounded lookback: it is producer index f_j - 1 iff addr[f_j - 1] == a_j
-(all older same-address entries are immediately adjacent — the youngest
-is the last one below the frontier). This is why the paper's pending
-buffers can stay small; here it collapses the associative search to one
-gather + compare.
+bounded lookback: all same-address entries are immediately adjacent, so
+the candidates are producer indices f_j - 1, f_j - 2, ... — a static
+``lookback``-deep scan (one gather + compare per step), not an
+associative search. This is why the paper's pending buffers can stay
+small. ``lookback=1`` with all-valid producers is the original RAW
+microbenchmark shape; guarded producers (§6: a store whose guard failed
+leaves a *request* but no effect) are skipped by their valid bit, which
+is why the scan must be able to look deeper than one entry — any
+``lookback >= max same-address run length`` is exact
+(``ops.min_lookback`` computes the tight bound for a stream).
 """
 
 from __future__ import annotations
@@ -32,42 +37,68 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _fused_kernel(src_addr_ref, src_val_ref, frontier_ref, dst_addr_ref,
-                  mem_ref, out_ref, hits_ref):
+def _fused_kernel(src_addr_ref, src_val_ref, src_valid_ref, frontier_ref,
+                  dst_addr_ref, mem_ref, out_ref, hits_ref, *,
+                  lookback: int):
     f = frontier_ref[...]  # (block_d,) producer commit counts
     a = dst_addr_ref[...]  # (block_d,)
-    last = jnp.maximum(f - 1, 0)
-    cand_addr = jnp.take(src_addr_ref[...], last, mode="clip")
-    cand_val = jnp.take(src_val_ref[...], last, mode="clip")
-    hit = (f > 0) & (cand_addr == a)
+    src_addr = src_addr_ref[...]
+    src_val = src_val_ref[...]
+    src_valid = src_valid_ref[...]
+    found = jnp.zeros(a.shape, dtype=jnp.bool_)
+    val = jnp.zeros(a.shape, dtype=src_val.dtype)
+    for lb in range(lookback):
+        idx = f - 1 - lb
+        ok = idx >= 0
+        cand_addr = jnp.take(src_addr, idx, mode="clip")
+        cand_val = jnp.take(src_val, idx, mode="clip")
+        cand_ok = jnp.take(src_valid, idx, mode="clip") == 1
+        match = ok & (cand_addr == a) & cand_ok
+        val = jnp.where(match & ~found, cand_val, val)
+        found = found | match
     mem_val = jnp.take(mem_ref[...], a, mode="clip")
-    out_ref[...] = jnp.where(hit, cand_val, mem_val)
-    hits_ref[...] = hit.astype(jnp.int32)
+    out_ref[...] = jnp.where(found, val, mem_val)
+    hits_ref[...] = found.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("lookback", "block_d", "interpret")
+)
 def fused_stream(
     src_addr: jax.Array,   # (S,) int32 monotonic producer addresses
     src_val: jax.Array,    # (S,) f32 producer values
     frontier: jax.Array,   # (D,) int32 per-consumer producer frontier
     dst_addr: jax.Array,   # (D,) int32 consumer addresses
     memory: jax.Array,     # (M,) f32 backing array (pre-producer state)
+    src_valid: jax.Array = None,  # (S,) optional §6 valid bits (1 = landed)
     *,
+    lookback: int = 1,
     block_d: int = 256,
     interpret: bool = False,
 ):
-    """Returns (values, forwarded_mask) for every consumer request."""
+    """Returns (values, forwarded_mask) for every consumer request.
+
+    ``src_valid=None`` means every producer request landed (the
+    unguarded case); then ``lookback=1`` is exact for distinct-address
+    producers and equal-address runs alike (the youngest entry below
+    the frontier is the run's youngest). With guarded producers pass
+    the valid bits and a ``lookback`` covering the longest
+    same-address run (``ops.min_lookback``).
+    """
     d = dst_addr.shape[0]
     d_pad = -d % block_d
     f_p = jnp.pad(frontier.astype(jnp.int32), (0, d_pad))
     a_p = jnp.pad(dst_addr.astype(jnp.int32), (0, d_pad))
+    if src_valid is None:
+        src_valid = jnp.ones(src_addr.shape, dtype=jnp.int32)
     grid = (a_p.shape[0] // block_d,)
     out, hits = pl.pallas_call(
-        _fused_kernel,
+        functools.partial(_fused_kernel, lookback=lookback),
         grid=grid,
         in_specs=[
             pl.BlockSpec((src_addr.shape[0],), lambda i: (0,)),
             pl.BlockSpec((src_val.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((src_valid.shape[0],), lambda i: (0,)),
             pl.BlockSpec((block_d,), lambda i: (i,)),
             pl.BlockSpec((block_d,), lambda i: (i,)),
             pl.BlockSpec((memory.shape[0],), lambda i: (0,)),
@@ -81,5 +112,6 @@ def fused_stream(
             jax.ShapeDtypeStruct((a_p.shape[0],), jnp.int32),
         ],
         interpret=interpret,
-    )(src_addr.astype(jnp.int32), src_val, f_p, a_p, memory)
+    )(src_addr.astype(jnp.int32), src_val, src_valid.astype(jnp.int32),
+      f_p, a_p, memory)
     return out[:d], hits[:d].astype(bool)

@@ -1,27 +1,53 @@
 """Public wrappers for the fused_stream kernel: end-to-end fused
 producer/consumer execution (the RAWloop pattern of paper Fig. 1, fully
-vectorized)."""
+vectorized), generalized to §6 guarded producer streams via per-request
+valid bits and a bounded same-address lookback."""
 
-import jax
+import numpy as np
 
 from repro.kernels.du_hazard.ops import hazard_frontier, hazard_frontier_ref
 from repro.kernels.fused_stream.kernel import fused_stream
 from repro.kernels.fused_stream.ref import fused_stream_ref
 
-__all__ = ["fused_stream", "fused_stream_ref", "fused_raw_loops"]
+__all__ = [
+    "fused_stream", "fused_stream_ref", "fused_raw_loops", "min_lookback",
+]
+
+
+def min_lookback(src_addr) -> int:
+    """Smallest exact ``lookback`` for a monotonic producer stream: the
+    longest run of equal addresses (a §6-invalid entry can hide at most
+    run-length - 1 younger siblings; the scan must reach past them)."""
+    a = np.asarray(src_addr)
+    if len(a) == 0:
+        return 1
+    starts = np.flatnonzero(np.diff(a) != 0)
+    bounds = np.concatenate([[-1], starts, [len(a) - 1]])
+    return int(np.diff(bounds).max())
 
 
 def fused_raw_loops(
-    src_addr, src_val, dst_addr, memory, *, interpret: bool = False
+    src_addr, src_val, dst_addr, memory, src_valid=None, *,
+    lookback=None, interpret: bool = False,
 ):
     """The complete Fig. 1 pipeline: producer loop storing A[f(i)],
     consumer loop loading A[g(j)], fused. Frontier merge (du_hazard) +
     forwarding (fused_stream) = consumer values with zero stalls and no
     sequentialization — assuming monotonic f(i), exactly the paper's
-    requirement. Consumers see the producer's final effect on overlapping
-    addresses; untouched addresses come from memory."""
+    requirement. Consumers see the producer's final *landed* effect on
+    overlapping addresses (guard-failed producers forward nothing —
+    pass their §6 valid bits as ``src_valid``); untouched addresses
+    come from memory.
+
+    ``lookback=None`` picks the exact depth: 1 for all-valid producers
+    (the youngest entry below the frontier is the run's youngest), the
+    longest same-address run otherwise — a valid producer hidden
+    behind younger invalid siblings must stay reachable."""
+    if lookback is None:
+        lookback = 1 if src_valid is None else min_lookback(src_addr)
     frontier = hazard_frontier(src_addr, dst_addr, interpret=interpret)
     vals, hits = fused_stream(
-        src_addr, src_val, frontier, dst_addr, memory, interpret=interpret
+        src_addr, src_val, frontier, dst_addr, memory, src_valid,
+        lookback=lookback, interpret=interpret,
     )
     return vals, hits

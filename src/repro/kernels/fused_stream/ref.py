@@ -3,15 +3,27 @@
 import jax.numpy as jnp
 
 
-def fused_stream_ref(src_addr, src_val, frontier, dst_addr, memory):
-    """Youngest producer before the frontier with matching address
-    forwards; otherwise read memory. Requires monotonic src_addr (the
-    youngest same-address producer below the frontier is at index
-    frontier-1)."""
+def fused_stream_ref(src_addr, src_val, frontier, dst_addr, memory,
+                     src_valid=None, lookback: int = 1):
+    """Youngest *valid* producer before the frontier with matching
+    address forwards; otherwise read memory. Requires monotonic
+    src_addr (same-address producers are adjacent, so the candidates
+    are the ``lookback`` entries just below the frontier)."""
     f = frontier.astype(jnp.int32)
     a = dst_addr.astype(jnp.int32)
-    last = jnp.maximum(f - 1, 0)
-    cand_addr = jnp.take(src_addr.astype(jnp.int32), last, mode="clip")
-    cand_val = jnp.take(src_val, last, mode="clip")
-    hit = (f > 0) & (cand_addr == a)
-    return jnp.where(hit, cand_val, jnp.take(memory, a, mode="clip")), hit
+    src_addr = src_addr.astype(jnp.int32)
+    if src_valid is None:
+        src_valid = jnp.ones(src_addr.shape, dtype=jnp.int32)
+    found = jnp.zeros(a.shape, dtype=jnp.bool_)
+    val = jnp.zeros(a.shape, dtype=src_val.dtype)
+    for lb in range(lookback):
+        idx = f - 1 - lb
+        ok = idx >= 0
+        cand_addr = jnp.take(src_addr, idx, mode="clip")
+        cand_val = jnp.take(src_val, idx, mode="clip")
+        cand_ok = jnp.take(src_valid.astype(jnp.int32), idx,
+                           mode="clip") == 1
+        match = ok & (cand_addr == a) & cand_ok
+        val = jnp.where(match & ~found, cand_val, val)
+        found = found | match
+    return jnp.where(found, val, jnp.take(memory, a, mode="clip")), found

@@ -1,0 +1,10 @@
+"""Pallas wave-execution backend for the fused executor (DESIGN.md §2):
+consumes ``core/executor`` WavePlans, executes each wave as a
+gather→compute→scatter step. Public surface: ``run_plan``,
+``run_sequential``, ``WaveExecResult``."""
+
+from repro.kernels.wave_exec.ops import (  # noqa: F401
+    WaveExecResult,
+    run_plan,
+    run_sequential,
+)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: one fused wave as a gather→scatter step
+(DESIGN.md §2 → the backend half of the WavePlan contract).
+
+A wave is a conflict-free batch of memory requests (no two touch the
+same address unless both are loads), so the whole batch executes
+data-parallel against a flat protected-memory image:
+
+    load_vals[i] = mem[addr[i]]                        (gather)
+    mem[addr[i]] = sval[i]   where is_store & valid    (scatter)
+
+Bit-exactness is by construction: the kernel only *moves* data. The
+f64 memory image travels as ``(M, 2)`` uint32 bit-pattern rows — TPUs
+have no f64 ALU, but a DU does not compute either; it disambiguates
+and moves. Store values arrive precomputed by the op tables
+(``core/optable``) from the gathers of *strictly earlier* waves
+(WavePlan contract 1), which is what makes the single-kernel
+gather+scatter sound: nothing computed in this wave feeds a store of
+this wave.
+
+The scatter writes back the gathered row for non-store lanes
+(semantic no-op — contract 2 guarantees no store shares their
+address), so the whole update is one vectorized masked scatter rather
+than a serialized in-kernel loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wave_kernel(mem_ref, addr_ref, write_ref, sval_ref, out_mem_ref,
+                 vals_ref):
+    mem = mem_ref[...]  # (M, 2) uint32 f64 bit patterns
+    addr = addr_ref[...]  # (W,) int32 in [0, M); see wave_step contract
+    rows = jnp.take(mem, addr, axis=0, mode="clip")  # gather (pre-wave)
+    vals_ref[...] = rows
+    write = write_ref[...][:, None] == 1  # (W, 1) store & valid & !pad
+    upd = jnp.where(write, sval_ref[...], rows)
+    # conflict-freedom (WavePlan contract 2) makes duplicate indices
+    # benign: duplicates are load lanes writing back identical rows
+    out_mem_ref[...] = mem.at[addr].set(upd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wave_step(
+    mem: jax.Array,   # (M, 2) uint32 — f64 memory image bit patterns
+    addr: jax.Array,  # (W,) int32 flat addresses in [0, M)
+    write: jax.Array,  # (W,) int32 1 = valid store lane, 0 = load/pad
+    sval: jax.Array,  # (W, 2) uint32 — precomputed store value patterns
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Execute one wave; returns (new mem image, gathered rows).
+
+    Caller contract: every lane's address must be in [0, M) and no two
+    lanes may share an address unless all of them are load lanes —
+    *including pad lanes*, because every non-write lane scatters its
+    gathered row back. ``ops._run`` satisfies this by appending one
+    scratch row past the image and pointing all pad lanes at it; a pad
+    address that aliased a real store's address would race it through
+    the duplicate-index scatter. Gathered rows are returned for every
+    lane; the caller keeps only the load lanes.
+    """
+    m = mem.shape[0]
+    w = addr.shape[0]
+    out_mem, vals = pl.pallas_call(
+        _wave_kernel,
+        in_specs=[
+            pl.BlockSpec((m, 2), lambda: (0, 0)),
+            pl.BlockSpec((w,), lambda: (0,)),
+            pl.BlockSpec((w,), lambda: (0,)),
+            pl.BlockSpec((w, 2), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, 2), lambda: (0, 0)),
+            pl.BlockSpec((w, 2), lambda: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((w, 2), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(mem, addr.astype(jnp.int32), write.astype(jnp.int32), sval)
+    return out_mem, vals

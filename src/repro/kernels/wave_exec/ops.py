@@ -1,0 +1,179 @@
+"""Wave-execution backend: drive a ``WavePlan`` through Pallas.
+
+``run_plan`` is the hardware half of the DESIGN.md §2 split: the plan
+(from ``core/executor.build_wave_plan``) carries the wave partition,
+flat addresses, op tables and captured CU operand streams; execution
+runs through the shared ``executor.drive_plan`` driver — identical
+compute/bookkeeping/checks to the numpy reference backend — with the
+memory step delegated to the ``wave_step`` Pallas kernel:
+
+    compute  — op-table closures produce this wave's store values and
+               §6 valid bits from the *gathers of earlier waves*
+               (host numpy by default: bit-exact vs the oracle; the
+               same closures run under jnp with ``compute="jnp"``),
+    gather + — one ``wave_step`` Pallas call moves the wave's memory
+    scatter    traffic against the flat uint32-pair image.
+
+That ordering is sound because a store's feeding loads are in strictly
+earlier waves (WavePlan contract 1) — the compute for wave *w* never
+needs wave *w*'s gathers. Request batches are padded to power-of-two
+buckets so the jitted kernel compiles O(log max-wave) times, not once
+per wave, and pad lanes target a scratch row past the image so they can
+never collide with a real store's address in-wave.
+
+``run_sequential`` executes the same plan one request per step — the
+paper's non-fused baseline on identical hardware — and is what
+``benchmarks/bench_pallas.py`` compares wave execution against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import executor as execlib
+
+__all__ = ["run_plan", "run_sequential", "WaveExecResult"]
+
+_MIN_BUCKET = 8
+
+
+@dataclasses.dataclass
+class WaveExecResult:
+    """Final arrays + execution profile of one backend run."""
+
+    arrays: dict[str, np.ndarray]
+    stats: execlib.WaveStats
+    n_steps: int  # pallas wave_step invocations
+    elapsed: float  # seconds inside the wave loop
+    complete: bool  # False when max_steps truncated the run
+
+
+def _bucket(n: int) -> int:
+    b = _MIN_BUCKET
+    while b < n:
+        b *= 2
+    return b
+
+
+def _to_u32(f64: np.ndarray) -> np.ndarray:
+    return np.ascontiguousarray(f64, dtype=np.float64).view(
+        np.uint32
+    ).reshape(-1, 2)
+
+
+def _from_u32(u32: np.ndarray) -> np.ndarray:
+    return np.ascontiguousarray(u32, dtype=np.uint32).view(
+        np.float64
+    ).reshape(-1)
+
+
+def _run(
+    plan: execlib.WavePlan,
+    arrays: dict[str, np.ndarray],
+    wave_of: Optional[np.ndarray],
+    n_waves: Optional[int],
+    *,
+    interpret: bool,
+    compute: str,
+    check: bool,
+    max_steps: Optional[int],
+) -> WaveExecResult:
+    import jax.numpy as jnp
+
+    from repro.kernels.wave_exec.kernel import wave_step
+
+    assert plan.mem_size < 2**31 - 1, "flat image exceeds int32 addressing"
+    # flat f64 image as uint32 bit-pattern rows (module doc), plus the
+    # scratch row pad lanes gather from / write back to
+    scratch = plan.mem_size
+    mem_f64 = np.zeros(plan.mem_size + 1, dtype=np.float64)
+    mem_f64[:plan.mem_size] = execlib.flat_image(plan, arrays)[
+        :plan.mem_size
+    ]
+    mem_dev = jnp.asarray(_to_u32(mem_f64))
+
+    def mem_step(flat_addr, write, sval):
+        nonlocal mem_dev
+        nb = len(flat_addr)
+        nb_pad = _bucket(nb)
+        addr = np.full(nb_pad, scratch, dtype=np.int32)
+        addr[:nb] = flat_addr
+        write_p = np.zeros(nb_pad, dtype=np.int32)
+        write_p[:nb] = write
+        sval_p = np.zeros(nb_pad, dtype=np.float64)
+        sval_p[:nb] = sval
+        mem_dev, vals = wave_step(
+            mem_dev, jnp.asarray(addr), jnp.asarray(write_p),
+            jnp.asarray(_to_u32(sval_p)), interpret=interpret,
+        )
+        return _from_u32(np.asarray(vals))[:nb]
+
+    t0 = time.perf_counter()
+    steps, complete = execlib.drive_plan(
+        plan, mem_step, frozen=arrays, wave_of=wave_of, n_waves=n_waves,
+        lib="np" if compute == "host" else "jnp", check=check,
+        max_steps=max_steps,
+    )
+    elapsed = time.perf_counter() - t0
+
+    mem_out = _from_u32(np.asarray(mem_dev))
+    out = execlib.unpack_image(plan, mem_out, arrays)
+    return WaveExecResult(
+        arrays=out, stats=plan.stats, n_steps=steps, elapsed=elapsed,
+        complete=complete,
+    )
+
+
+def run_plan(
+    plan: execlib.WavePlan,
+    arrays: dict[str, np.ndarray],
+    *,
+    interpret: bool = True,
+    compute: str = "host",
+    check: bool = True,
+    max_steps: Optional[int] = None,
+) -> WaveExecResult:
+    """Execute a WavePlan wave-parallel through the Pallas backend.
+
+    ``compute="host"`` (default) evaluates the op-table closures in
+    numpy — elementwise identical to the oracle, so final arrays are
+    bit-exact. ``compute="jnp"`` runs the same closures under
+    jax.numpy (accelerator dtype semantics; tolerance-checked in
+    tests, pair with ``check=False``).
+    ``check`` pins every gather, store value and §6 valid bit
+    request-exact against the plan's oracle reference streams — leave
+    on except when timing.
+    ``interpret`` runs the Pallas kernel in interpreter mode (the CPU
+    CI path); pass False on real TPU hardware.
+    """
+    assert compute in ("host", "jnp"), f"unknown compute {compute!r}"
+    return _run(
+        plan, arrays, None, None,
+        interpret=interpret, compute=compute, check=check,
+        max_steps=max_steps,
+    )
+
+
+def run_sequential(
+    plan: execlib.WavePlan,
+    arrays: dict[str, np.ndarray],
+    *,
+    interpret: bool = True,
+    compute: str = "host",
+    check: bool = False,
+    max_steps: Optional[int] = None,
+) -> WaveExecResult:
+    """Execute the plan one request per Pallas step, in program order —
+    the sequential (non-fused) baseline on the same hardware path.
+    ``max_steps`` truncates for timing extrapolation (the result's
+    ``complete`` flag records it; truncated arrays are partial)."""
+    n = plan.n_requests
+    return _run(
+        plan, arrays, np.arange(n, dtype=np.int64), n,
+        interpret=interpret, compute=compute, check=check,
+        max_steps=max_steps,
+    )

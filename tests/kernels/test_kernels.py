@@ -37,6 +37,46 @@ def test_du_hazard_sweep(s, d, hi):
     np.testing.assert_array_equal(got, hazard_frontier_ref(src, dst))
 
 
+@pytest.mark.parametrize("side", ["right", "left"])
+def test_du_hazard_side_sweep(side):
+    """Hazard merge ("right") includes the equal-address producer;
+    strict precedence ("left") counts only strictly-smaller ones."""
+    from repro.kernels.du_hazard.ops import hazard_frontier, hazard_frontier_ref
+
+    k1, k2 = keys(2)
+    src = jnp.sort(jax.random.randint(k1, (70,), 0, 25))
+    dst = jax.random.randint(k2, (41,), 0, 30)
+    got = hazard_frontier(src, dst, side=side, block_d=64, block_s=64,
+                          interpret=True)
+    np.testing.assert_array_equal(got, hazard_frontier_ref(src, dst, side))
+    if side == "left":
+        right = hazard_frontier_ref(src, dst, "right")
+        assert bool(jnp.any(got < right))  # equal addresses exist
+
+
+@pytest.mark.parametrize("k,s,d", [(3, 40, 30), (6, 129, 77)])
+def test_du_hazard_batch_sweep(k, s, d):
+    """K independent stream pairs in one launch == K single merges."""
+    from repro.kernels.du_hazard.ops import (
+        hazard_frontier_batch,
+        hazard_frontier_batch_ref,
+        hazard_frontier_ref,
+    )
+
+    k1, k2 = keys(2)
+    src = jnp.sort(jax.random.randint(k1, (k, s), 0, 50), axis=1)
+    dst = jax.random.randint(k2, (k, d), 0, 60)
+    got = hazard_frontier_batch(src, dst, block_d=64, block_s=64,
+                                interpret=True)
+    np.testing.assert_array_equal(
+        got, hazard_frontier_batch_ref(src, dst)
+    )
+    for kk in range(k):
+        np.testing.assert_array_equal(
+            got[kk], hazard_frontier_ref(src[kk], dst[kk])
+        )
+
+
 # ---------------------------------------------------------------------------
 # fused_stream (store-to-load forwarding)
 # ---------------------------------------------------------------------------
@@ -84,6 +124,42 @@ def test_fused_stream_semantics_vs_loop():
         jnp.asarray(mem0), interpret=True,
     )
     np.testing.assert_allclose(np.asarray(got), expected, atol=1e-6)
+
+
+@pytest.mark.parametrize("valid_rate", [1.0, 0.5, 0.0])
+def test_fused_stream_guarded_vs_loop(valid_rate):
+    """§6 generalization: guard-failed producers forward nothing — the
+    bounded lookback skips them. Oracle is an independent sequential
+    loop applying only the landed stores."""
+    from repro.kernels.fused_stream.ops import fused_raw_loops, min_lookback
+
+    rng = np.random.default_rng(11)
+    mem0 = rng.standard_normal(24).astype(np.float32)
+    src = np.sort(rng.integers(0, 24, 50))
+    val = rng.standard_normal(50).astype(np.float32)
+    valid = (rng.random(50) < valid_rate).astype(np.int32)
+    dst = rng.integers(0, 24, 37)
+    seq = mem0.copy()
+    for a, v, ok in zip(src, val, valid):
+        if ok:
+            seq[a] = v
+    lb = min_lookback(src)
+    got, hits = fused_raw_loops(
+        jnp.asarray(src), jnp.asarray(val), jnp.asarray(dst),
+        jnp.asarray(mem0), jnp.asarray(valid), lookback=lb, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(got), seq[dst], atol=1e-6)
+    if valid_rate == 0.0:
+        assert not np.asarray(hits).any()
+
+
+def test_min_lookback_runs():
+    from repro.kernels.fused_stream.ops import min_lookback
+
+    assert min_lookback(np.array([], dtype=np.int64)) == 1
+    assert min_lookback(np.array([1, 2, 3])) == 1
+    assert min_lookback(np.array([1, 1, 2, 2, 2, 5])) == 3
+    assert min_lookback(np.array([7, 7, 7, 7])) == 4
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,15 @@ Checks, failing loudly on the first broken invariant:
      source tree or docs points at a section heading that exists,
   3. the public API surface the docs and examples lean on has real
      docstrings: every module/function/class named in PUBLIC_API, plus
-     every module imported by ``examples/*.py`` from ``repro``.
+     every module imported by ``examples/*.py`` from ``repro``,
+  4. the CI gate table in README.md and the workflow agree in *both*
+     directions: every job in the table exists in
+     .github/workflows/ci.yml and every script the table claims a job
+     runs is actually invoked there; conversely every workflow job is
+     documented in the table and every benchmarks/ or tools/ script the
+     workflow invokes is named somewhere in README/DESIGN — so a CI
+     refactor cannot silently orphan a documented gate (or document a
+     gate that no longer runs).
 
 Usage:  python tools/check_docs.py   (repo root, PYTHONPATH-free)
 """
@@ -47,6 +55,13 @@ PUBLIC_API = [
     ("repro.core.speculate", "trace_spec_pe"),
     ("repro.core.du", "check_pair_batch"),
     ("repro.core.executor", "execute"),
+    ("repro.core.executor", "build_wave_plan"),
+    ("repro.core.executor", "WavePlan"),
+    ("repro.core.executor", "validate_plan"),
+    ("repro.core.optable", "compile_store_tables"),
+    ("repro.core.optable", "StoreTable"),
+    ("repro.kernels.wave_exec", "run_plan"),
+    ("repro.kernels.wave_exec", "run_sequential"),
     ("repro.core.programs", None),
     ("repro.dse", "sweep"),
     ("repro.dse", "SweepSpec"),
@@ -115,6 +130,91 @@ for dirpath, _dirs, files in os.walk(SRC):
         if fn.endswith(".py"):
             p = os.path.join(dirpath, fn)
             scan_refs(os.path.relpath(p, ROOT), open(p).read())
+
+# -- 4. CI gates: README table <-> workflow, both directions -----------------
+# Parsed with regexes, not pyyaml — CI installs only jax/numpy/pytest/
+# hypothesis and this gate must not grow a dependency.
+
+WORKFLOW = os.path.join(ROOT, ".github", "workflows", "ci.yml")
+
+_JOB_RE = re.compile(r"^  ([A-Za-z_][\w-]*):\s*$")
+_SCRIPT_RE = re.compile(r"\b((?:benchmarks|tools|examples|tests)/[\w./-]+\.py)\b")
+
+
+def parse_workflow(path: str) -> tuple[set[str], set[str]]:
+    """(job ids, repo-relative scripts invoked by run: commands).
+
+    Comments are stripped before harvesting scripts — a commented-out
+    (or merely mentioned) gate must not satisfy the "workflow actually
+    invokes it" direction of the check.
+    """
+    jobs: set[str] = set()
+    scripts: set[str] = set()
+    in_jobs = False
+    for line in open(path):
+        if re.match(r"^jobs:\s*$", line):
+            in_jobs = True
+            continue
+        if in_jobs and re.match(r"^[A-Za-z_]", line):
+            in_jobs = False  # left the jobs: mapping
+        if in_jobs:
+            m = _JOB_RE.match(line)
+            if m:
+                jobs.add(m.group(1))
+        scripts.update(_SCRIPT_RE.findall(re.sub(r"#.*", "", line)))
+    return jobs, scripts
+
+
+def parse_gate_table(readme: str) -> list[tuple[str, set[str]]]:
+    """Rows of the README "CI gates" table: (job id, scripts named)."""
+    rows: list[tuple[str, set[str]]] = []
+    in_section = False
+    for line in readme.splitlines():
+        if re.match(r"^#{2,}\s+CI gates", line):
+            in_section = True
+            continue
+        if in_section and line.startswith("#"):
+            break
+        if in_section and line.startswith("|"):
+            cells = [c.strip() for c in line.strip("|").split("|")]
+            if len(cells) < 2 or set(cells[0]) <= {"-", " ", ":"}:
+                continue
+            job = cells[0].strip("`")
+            if job.lower() in ("job", ""):
+                continue
+            scripts = set()
+            for c in cells[1:]:
+                scripts.update(_SCRIPT_RE.findall(c))
+            rows.append((job, scripts))
+    return rows
+
+
+if not os.path.exists(WORKFLOW):
+    err("no CI workflow at .github/workflows/ci.yml")
+else:
+    wf_jobs, wf_scripts = parse_workflow(WORKFLOW)
+    readme_text = open(os.path.join(ROOT, "README.md")).read()
+    design_text = open(os.path.join(ROOT, "DESIGN.md")).read()
+    gate_rows = parse_gate_table(readme_text)
+    if not gate_rows:
+        err('README.md: no "CI gates" table (## CI gates section)')
+    table_jobs = {job for job, _ in gate_rows}
+    for job, scripts in gate_rows:
+        if job not in wf_jobs:
+            err(f"README CI gates: job '{job}' not in ci.yml "
+                f"(workflow has: {sorted(wf_jobs)})")
+        for s in scripts:
+            if s not in wf_scripts:
+                err(f"README CI gates: '{job}' claims `{s}` but the "
+                    f"workflow never invokes it")
+    for job in sorted(wf_jobs - table_jobs):
+        err(f"ci.yml job '{job}' missing from the README CI gates table")
+    # every gate script CI runs must be named somewhere in the docs
+    doc_text = readme_text + design_text
+    for s in sorted(wf_scripts):
+        if s.startswith(("benchmarks/", "tools/")) and s not in doc_text:
+            err(f"ci.yml invokes `{s}` but neither README.md nor "
+                f"DESIGN.md mentions it")
 
 # -- 3. docstring audit ------------------------------------------------------
 
