@@ -7,11 +7,16 @@ Produces the evidence file committed as ``BENCH_PALLAS.json``:
   * per kernel at ``--scale-mult`` x the paper_table1 scales: request
     count, wave count, wave parallelism (requests / waves — the Fig. 1c
     cross-loop parallelism the paper's DU extracts by stalling and the
-    wave backend extracts by partitioning), measured wall-clock of the
-    Pallas wave path, and the sequential one-request-per-step baseline
-    (measured over a ``--seq-steps`` prefix and extrapolated —
-    ``seq_extrapolated`` records it; running 100k one-request Pallas
-    steps to completion serves no one),
+    wave backend extracts by partitioning), batched-step count and
+    parallelism, measured wall-clock of the Pallas wave path, and the
+    sequential one-request-per-step baseline. The baseline is measured
+    over a ``--seq-steps`` prefix: ``seq_measured_wall_s`` /
+    ``seq_steps_measured`` are always what the clock actually saw, and
+    ``seq_extrapolated`` says which speedup key is present —
+    ``speedup_vs_sequential`` only when the baseline ran to completion,
+    ``speedup_vs_sequential_extrapolated`` (against
+    ``seq_wall_s_extrapolated``) otherwise. Measured and extrapolated
+    numbers never share a key,
   * bit-exactness: final arrays of the wave backend are asserted
     array-equal against ``simulate()`` (FUS2, event engine) AND the
     sequential oracle for every kernel,
@@ -54,9 +59,13 @@ SMOKE_SCALES = {
 }
 
 # wave-parallelism bar asserted on the full run: every Table-1 kernel
-# must extract real cross-loop parallelism (matpower's chained SpMV
-# recurrence is the structural floor at ~2x)
+# must extract real cross-loop parallelism
 PAR_BAR = 1.5
+# the three kernels the old per-PE-barrier partition serialized (their
+# stores waited on *every* prior load of their PE, not just the feeding
+# ones): the exact per-(PE, dep-edge) partition must keep them well
+# clear of that floor
+PAR_FLOORS = {"matpower": 8.0, "pagerank": 8.0, "spmv_ldtrip": 8.0}
 # wall-clock bar: interpret-mode step overhead dominates both paths, so
 # the wave path's win tracks its step-count reduction — demand a real
 # speedup only where the partition removes most steps (parallelism >=
@@ -172,23 +181,39 @@ def run_kernel(name, scale, *, trace_mode="auto", check=True,
         "trace_mode": trace_mode,
         "n_requests": plan.stats.n_requests,
         "n_waves": plan.stats.n_waves,
+        "n_steps": plan.stats.n_steps,
         "parallelism": round(plan.stats.parallelism, 2),
+        "step_parallelism": round(plan.stats.step_parallelism, 2),
         "plan_wall_s": round(t_plan, 3),
         "wave_wall_s": round(t_wave, 3),
+        "wave_resolve_s": round(res.resolve_s, 3),
+        "wave_device_s": round(res.device_s, 3),
         "pallas_steps": res.n_steps,
+        "pallas_segments": res.n_segments,
     }
     if seq_steps:
         limit = min(seq_steps, plan.stats.n_requests)
         seq = wave_exec.run_sequential(
             plan, arrays, interpret=True, check=False, max_steps=limit,
         )
-        per_step = seq.elapsed / max(seq.n_steps, 1)
-        row["seq_wall_s"] = round(per_step * plan.stats.n_requests, 3)
+        # measured and extrapolated numbers never share a key: the
+        # measured wall/steps are always reported as such, and only a
+        # complete baseline may claim the unqualified speedup
         row["seq_extrapolated"] = not seq.complete
         row["seq_steps_measured"] = seq.n_steps
-        row["speedup_vs_sequential"] = round(
-            row["seq_wall_s"] / max(t_wave, 1e-9), 2
-        )
+        row["seq_measured_wall_s"] = round(seq.elapsed, 3)
+        if seq.complete:
+            row["seq_wall_s"] = round(seq.elapsed, 3)
+            row["speedup_vs_sequential"] = round(
+                seq.elapsed / max(t_wave, 1e-9), 2
+            )
+        else:
+            per_step = seq.elapsed / max(seq.n_steps, 1)
+            est = per_step * plan.stats.n_requests
+            row["seq_wall_s_extrapolated"] = round(est, 3)
+            row["speedup_vs_sequential_extrapolated"] = round(
+                est / max(t_wave, 1e-9), 2
+            )
     return row, plan, arrays
 
 
@@ -227,8 +252,12 @@ def bench(scale_mult: int = 8, seq_steps: int = 256) -> dict:
         )
         row["crosschecks"] = frontier_crosschecks(name, plan, arrays)
         out["kernels"][name] = row
-        seq = (f" vs seq ~{row['seq_wall_s']}s" if "seq_wall_s" in row
-               else "")
+        if "seq_wall_s" in row:
+            seq = f" vs seq {row['seq_wall_s']}s"
+        elif "seq_wall_s_extrapolated" in row:
+            seq = f" vs seq ~{row['seq_wall_s_extrapolated']}s (extrap)"
+        else:
+            seq = ""
         print(f"{name:12s} @{row['scale']}: {row['n_requests']} req in "
               f"{row['n_waves']} waves ({row['parallelism']}x), wave "
               f"{row['wave_wall_s']}s{seq}", flush=True)
@@ -250,14 +279,27 @@ def check_bar(data: dict) -> None:
             f"{name}: wave parallelism {row['parallelism']} below the "
             f"{PAR_BAR}x bar"
         )
-        # absent when run with --seq-steps 0 (no baseline measured)
-        speedup = row.get("speedup_vs_sequential")
+        # absent when run with --seq-steps 0 (no baseline measured);
+        # the extrapolated speedup (if that is what we have) holds to
+        # the same bar — it is overhead-dominated in interpret mode, so
+        # extrapolation is linear in step count
+        speedup = row.get("speedup_vs_sequential",
+                          row.get("speedup_vs_sequential_extrapolated"))
         if speedup is None:
             continue
         bar = 1.0 if row["parallelism"] >= SPEEDUP_PAR_MIN else SPEEDUP_FLOOR
         assert speedup > bar, (
             f"{name}: wave wall-clock speedup {speedup} below the "
             f"{bar}x bar (parallelism {row['parallelism']})"
+        )
+    # the old per-PE barrier serialized these three; the exact
+    # per-(PE, dep-edge) partition must hold them above the floor
+    # (spmv_ldtrip is a SPEC_KERNELS row, hence the second loop's data)
+    for name, floor in PAR_FLOORS.items():
+        row = data["kernels"][name]
+        assert row["parallelism"] >= floor, (
+            f"{name}: wave parallelism {row['parallelism']} below the "
+            f"{floor}x serialization floor"
         )
 
 

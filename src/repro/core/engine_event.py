@@ -42,6 +42,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import coarsen as coarsenlib
 from repro.core import dae as daelib
 from repro.core import du as dulib
 from repro.core import schedule as schedlib
@@ -187,6 +188,14 @@ class EventEngine:
         # happen only for ports an event or a state change actually touched
         self.port_order = list(traces)
         self.dirty: set[str] = set(traces)
+        # temporal wave coarsening (core/coarsen.BlockMemo): a
+        # check-blocked attempt whose observable inputs are unchanged is
+        # skipped on a key comparison instead of re-running the batch
+        # checks — this is what tames the pagerank re-evaluation storm
+        # without touching issue cycles (timing is bit-identical: only
+        # attempts that would return False without side effects are
+        # skipped; see _issue_wave for the record conditions)
+        self.block_memo = coarsenlib.BlockMemo()
         self.ack_dirty: set[str] = set()
         self.deliver_dirty: set[int] = set()
         self.capped: set[str] = set()
@@ -329,6 +338,21 @@ class EventEngine:
             self.capped.add(op_id)
             return False
         n0 = port.next
+        # temporal coarsening: when a prior attempt was check-blocked on
+        # its first request with every consulted src *current* (no
+        # future-stamped issue cycles — checks a pure function of the
+        # src (head, next) windows), an attempt with an identical
+        # fingerprint must fail identically, with no side effects to
+        # replay — skip it (coarsen.BlockMemo doc)
+        memo_key = coarsenlib.BlockMemo.key(
+            n0, len(port.val_time),
+            tuple(
+                (self.ports[pr.src].head, self.ports[pr.src].next)
+                for pr in self.pairs_by_dst.get(op_id, ())
+            ),
+        )
+        if self.block_memo.probe(op_id, memo_key):
+            return False
         m = port.n - n0
         capped = False
         if horizon is not None and horizon - start < m:
@@ -388,6 +412,7 @@ class EventEngine:
         sl_sched = port.sched[n0 : n0 + m]
         sl_addr = port.addr[n0 : n0 + m]
         ok = np.ones(m, dtype=bool)
+        all_current = True  # every consulted src current so far
         for pair in self.pairs_by_dst.get(op_id, ()):
             if self.sequential and not pair.same_pe:
                 continue  # LSQ: cross-loop order enforced by instances
@@ -410,6 +435,7 @@ class EventEngine:
             src_current = (
                 src.next == 0 or src.issue_cycle[src.next - 1] <= self.now
             )
+            all_current &= src_current
             frontier = None
             next_state = None
             if not src_current:
@@ -424,6 +450,15 @@ class EventEngine:
                 frontier=frontier, next_state=next_state,
             )
             if not ok[0]:
+                # check-blocked on the first request. Record the
+                # fingerprint only when every consulted src is current
+                # (outcome independent of time) and outside LSQ mode
+                # (the sequential window is not in the key); a current
+                # prefix also guarantees _schedule_usenext_retry posts
+                # nothing (all stamped issues <= now <= cyc[0]), so a
+                # skipped replay loses no event.
+                if all_current and not self.sequential:
+                    self.block_memo.record(op_id, memo_key)
                 self._schedule_usenext_retry(op_id, port, int(cyc[0]))
                 return False
         L = m if ok.all() else int(np.argmin(ok))

@@ -17,9 +17,18 @@ searches):
     every load since it (computed in one program-order sweep — the
     vectorized analogue is the monotonic frontier merge in
     ``kernels/du_hazard``),
-  * dataflow edges: a store depends on the loads of its own iteration
-    (DAE value chain), approximated PE-locally by "store depends on the
-    most recent loads of its PE".
+  * dataflow edges: a store depends on exactly the load requests that
+    feed its compute body — per (PE, dep-edge), resolved through the
+    op-table dep maps, **not** a per-PE barrier. Independent per-address
+    chains (CSR row accumulations, chained SpMVs) therefore overlap
+    instead of serializing behind every other chain of their PE.
+
+Waves are then coarsened into **steps**
+(``core/coarsen.batch_conflict_free_waves``): consecutive waves merge
+into one gather-before-scatter step whenever the merged batch has no
+internal RAW/WAW or dataflow edge (internal WAR is safe — gathers see
+the pre-step image), so a backend's step count tracks the *memory*
+critical path rather than the wave count.
 
 The module is split along the backend seam (DESIGN.md §2):
 
@@ -66,10 +75,15 @@ class WaveStats:
     n_requests: int
     n_waves: int
     sequential_depth: int  # = n_requests (one request per step, fused b/w)
+    n_steps: int = 0  # batched gather→scatter steps (<= n_waves)
 
     @property
     def parallelism(self) -> float:
         return self.n_requests / max(self.n_waves, 1)
+
+    @property
+    def step_parallelism(self) -> float:
+        return self.n_requests / max(self.n_steps, 1)
 
 
 @dataclasses.dataclass
@@ -81,8 +95,9 @@ class WavePlan:
 
       1. waves topologically order the exact dependences — same-address
          RAW/WAR/WAW (invalid §6 stores occupy wave slots too) and the
-         PE dataflow edge (a store is in a strictly later wave than
-         every load request feeding its compute body),
+         per-(PE, dep-edge) dataflow edge (a store is in a strictly
+         later wave than every load request feeding its compute body,
+         resolved through ``dep_maps`` — not a per-PE barrier),
       2. intra-wave conflict-freedom — within one wave no two requests
          touch the same flat address unless both are loads, so a
          backend may gather all of a wave's loads and scatter all of
@@ -94,7 +109,17 @@ class WavePlan:
       4. ``req_valid``/``req_value`` are *reference* streams from the
          oracle walk: a backend recomputes valid bits from the op-table
          guards and load/store values from its own gathers; the
-         reference exists to pin the first divergence, not to execute.
+         reference exists to pin the first divergence, not to execute,
+      5. ``req_step`` coarsens waves into batched gather-before-scatter
+         steps (``core/coarsen.py``): steps are contiguous wave runs
+         (``req_step`` is a non-decreasing function of ``req_wave``);
+         within one step no two requests touch the same flat address
+         except loads with loads and the WAR pair (the load's wave
+         strictly precedes the store's), and every store's feeding
+         loads sit in strictly earlier *steps* — so one step may gather
+         all its loads against the pre-step image and then scatter all
+         its valid stores. ``batch_waves=False`` degenerates steps to
+         waves (``req_step == req_wave``).
     """
 
     program: ir.Program
@@ -112,6 +137,7 @@ class WavePlan:
     req_valid: np.ndarray  # (n,) bool   (reference, see contract 4)
     req_value: np.ndarray  # (n,) float64 (reference; NaN for invalid)
     req_wave: np.ndarray  # (n,) int64
+    req_step: np.ndarray  # (n,) int64 batched step (contract 5)
     req_ordinal: np.ndarray  # (n,) int64 k-th request of its own op
     # compute bodies (core/optable) + captured operand streams
     tables: dict[str, optablelib.StoreTable]
@@ -208,6 +234,7 @@ def build_wave_plan(
     params: Optional[dict[str, int]] = None,
     trace_mode: str = "auto",
     speculation: str = "off",
+    batch_waves: bool = True,
 ) -> WavePlan:
     """Run the AGU/CU front-end and emit the backend-consumable plan.
 
@@ -223,13 +250,17 @@ def build_wave_plan(
     (load-dependent trips/addresses, DESIGN.md §10): the wave partition
     works off the *true* post-squash request stream — phantom squash
     traffic is a DU-timing artifact and has no wave-executor analogue.
+
+    ``batch_waves`` (default on) coarsens the wave partition into
+    batched steps (WavePlan contract 5); ``False`` keeps one step per
+    wave — the partition itself is identical either way.
     """
     params = params or {}
 
+    from repro.core import coarsen as coarsenlib
     from repro.core import dae as daelib
 
     dae = daelib.decouple(program, speculation=speculation)
-    op_pe = dae.op_to_pe
     # the flat image and the op-table closures compute in f64; a
     # narrower protected array would make the oracle round every store
     # to the array dtype and the backends diverge in the last ulp —
@@ -338,18 +369,35 @@ def build_wave_plan(
     # per (array, addr): wave of last store; max wave of loads since it
     last_store_wave: dict[tuple[str, int], int] = {}
     loads_since_store: dict[tuple[str, int], int] = {}
-    # per PE: max wave of recent loads (dataflow into store values)
-    pe_load_wave: dict[int, int] = {}
+    # per load op: wave of its k-th request (appended in program order,
+    # so list position == ordinal) — the exact per-(PE, dep-edge)
+    # dataflow inputs a store's wave is computed from
+    wave_of_load: dict[str, list[int]] = {}
+    # per request: max wave over its feeding loads (-1 for loads and
+    # dep-free stores) — feeds the wave-batching admission rule
+    feed_max = np.full(n, -1, dtype=np.int64)
 
     for i in range(n):
-        key = (op_array[req_op_l[i]], req_addr_l[i])
+        o = req_op_l[i]
+        key = (op_array[o], req_addr_l[i])
         if req_store[i]:
             # WAW: after last store; WAR: after every load since it;
-            # dataflow: after this PE's recent loads (value availability)
+            # dataflow: after exactly the load requests feeding this
+            # store's value/guard (dep maps, contract 3) — invalid §6
+            # stores included, their *guard* still reads those loads
+            fm = -1
+            k = req_ordinal[i]
+            for ld in tables[o].deps:
+                m = dep_rows[o][ld][k]
+                if m >= 0:
+                    lw = wave_of_load[ld][m]
+                    if lw > fm:
+                        fm = lw
+            feed_max[i] = fm
             w = max(
                 last_store_wave.get(key, -1) + 1,
                 loads_since_store.get(key, -1) + 1,
-                pe_load_wave.get(op_pe[req_op_l[i]], -1) + 1,
+                fm + 1,
             )
             if req_valid[i]:
                 last_store_wave[key] = w
@@ -362,11 +410,14 @@ def build_wave_plan(
             # RAW: after the last store to this address
             w = last_store_wave.get(key, -1) + 1
             loads_since_store[key] = max(loads_since_store.get(key, -1), w)
-            pe = op_pe[req_op_l[i]]
-            pe_load_wave[pe] = max(pe_load_wave.get(pe, -1), w)
+            wave_of_load.setdefault(o, []).append(w)
         waves[i] = w
 
     n_waves = int(waves.max()) + 1 if n else 0
+
+    # --- wave coarsening: batch conflict-free waves into steps -----------
+    # (needs flat addresses — computed below — so steps are assigned
+    # after the layout pass)
 
     # --- flat protected-memory layout ------------------------------------
     protected = sorted({op_array[o] for o in op_ids})
@@ -394,14 +445,24 @@ def build_wave_plan(
     }
     op_nreq = {o: len(per_op_vv.get(o, ())) for o in op_ids}
 
-    stats = WaveStats(n_requests=n, n_waves=n_waves, sequential_depth=n)
+    if batch_waves:
+        step_of_wave, n_steps = coarsenlib.batch_conflict_free_waves(
+            waves, req_flat, req_store, feed_max,
+        )
+        req_step = step_of_wave[waves] if n else waves.copy()
+    else:
+        req_step, n_steps = waves.copy(), n_waves
+
+    stats = WaveStats(
+        n_requests=n, n_waves=n_waves, sequential_depth=n, n_steps=n_steps,
+    )
     return WavePlan(
         program=program, params=dict(params),
         op_ids=op_ids, op_array=op_array, op_is_store=op_is_store,
         op_nreq=op_nreq,
         req_op=req_op, req_addr=req_addr, req_flat=req_flat,
         req_store=req_store, req_valid=req_valid, req_value=req_value,
-        req_wave=waves, req_ordinal=req_ordinal,
+        req_wave=waves, req_step=req_step, req_ordinal=req_ordinal,
         tables=tables, env=env, dep_maps=dep_maps,
         array_order=protected, base=base, mem_size=off,
         stats=stats,
@@ -433,7 +494,8 @@ def wave_store_inputs(
 
 
 def validate_plan(plan: WavePlan) -> None:
-    """Assert the WavePlan contract (docstring items 1–3) vectorized.
+    """Assert the WavePlan contract (docstring items 1–3 and 5)
+    vectorized.
 
     Cheap enough to run in tests on every kernel; backends may call it
     defensively before executing an externally produced plan.
@@ -457,6 +519,14 @@ def validate_plan(plan: WavePlan) -> None:
             w = np.zeros(plan.op_nreq[op_id], dtype=np.int64)
             w[plan.req_ordinal[rows]] = waves[rows]
             lv_wave[op_id] = w
+    lv_step: dict[str, np.ndarray] = {}
+    steps = plan.req_step
+    for op_id, is_store in plan.op_is_store.items():
+        if not is_store:
+            rows = np.nonzero(plan.req_op == plan.op_ids.index(op_id))[0]
+            s = np.zeros(plan.op_nreq[op_id], dtype=np.int64)
+            s[plan.req_ordinal[rows]] = steps[rows]
+            lv_step[op_id] = s
     for op_id, per_ld in plan.dep_maps.items():
         rows = np.nonzero(plan.req_op == plan.op_ids.index(op_id))[0]
         k = plan.req_ordinal[rows]
@@ -466,9 +536,40 @@ def validate_plan(plan: WavePlan) -> None:
             assert np.all(
                 waves[rows][ok] > lv_wave[ld][mm[ok]]
             ), f"store {op_id} not strictly after its {ld} inputs"
+            # 5. feeding loads in strictly earlier *steps* too (the
+            # batching admission rule — same-step loads do not exist
+            # yet when the step's store values are computed)
+            assert np.all(
+                steps[rows][ok] > lv_step[ld][mm[ok]]
+            ), f"store {op_id} shares a step with its {ld} inputs"
             # -1 rows must be guard-invalid (contract 3)
             assert np.all(plan.req_valid[rows][~ok] == False)  # noqa: E712
+    # 5. steps coarsen waves order-preservingly: the step index is a
+    # non-decreasing function of the wave index
+    if n:
+        order = np.argsort(waves, kind="stable")
+        assert np.all(np.diff(steps[order]) >= 0), (
+            "steps do not coarsen waves monotonically"
+        )
+    # 5. step-level conflict-freedom: stores never share (step, addr)
+    # with another store, and only with loads from strictly earlier
+    # waves (the batch-internal WAR a gather-before-scatter step allows)
+    skey = steps * max(plan.mem_size, 1) + plan.req_flat
+    stouched = skey[plan.req_store]
+    assert len(np.unique(stouched)) == len(stouched), (
+        "two stores share (step, address)"
+    )
+    store_wave_of = dict(zip(stouched.tolist(),
+                             waves[plan.req_store].tolist()))
+    lrows = np.nonzero(~plan.req_store)[0]
+    for i, kk in zip(lrows.tolist(), skey[lrows].tolist()):
+        sw = store_wave_of.get(kk)
+        assert sw is None or waves[i] < sw, (
+            "load shares (step, address) with a non-later store"
+        )
     assert n == 0 or int(waves.max()) + 1 == plan.stats.n_waves
+    assert n == 0 or int(steps.max()) + 1 == plan.stats.n_steps
+    assert plan.stats.n_steps <= plan.stats.n_waves or n == 0
 
 
 def drive_plan(
@@ -476,43 +577,45 @@ def drive_plan(
     mem_step,
     *,
     frozen: dict[str, np.ndarray],
-    wave_of: Optional[np.ndarray] = None,
-    n_waves: Optional[int] = None,
+    step_of: Optional[np.ndarray] = None,
+    n_steps: Optional[int] = None,
     lib: str = "np",
     check: bool = True,
     max_steps: Optional[int] = None,
 ) -> tuple[int, bool]:
-    """Shared wave-loop driver for every backend.
+    """Shared step-loop driver for every backend.
 
-    Owns everything that must stay identical across backends — wave
-    batching, op-table compute (store values + §6 valid bits from
-    *earlier* waves' gathers, contract 1), dep/load-stream bookkeeping,
-    and the request-exact divergence checks — and delegates only the
-    memory move: ``mem_step(flat_addr, write_mask, store_vals) ->
-    gathered f64 values per lane`` over whatever image the backend
-    keeps (a numpy array here, a Pallas-resident uint32 image in
-    ``kernels/wave_exec``). ``wave_of``/``n_waves`` default to the
-    plan's partition; pass one wave per request for the sequential
-    baseline. Returns (steps taken, ran to completion).
+    Owns everything that must stay identical across backends — the
+    batched-step iteration, op-table compute (store values + §6 valid
+    bits from *earlier* steps' gathers, contract 5), dep/load-stream
+    bookkeeping, and the request-exact divergence checks — and
+    delegates only the memory move: ``mem_step(flat_addr, write_mask,
+    store_vals) -> gathered f64 values per lane`` over whatever image
+    the backend keeps (a numpy array here, a Pallas-resident uint32
+    image in ``kernels/wave_exec``). The gather must read the
+    *pre-step* image (contract 5 admits WAR inside a step).
+    ``step_of``/``n_steps`` default to the plan's batched partition;
+    pass ``req_wave`` for one step per wave, or ``arange(n)`` for the
+    sequential baseline. Returns (steps taken, ran to completion).
     """
-    if wave_of is None:
-        wave_of = plan.req_wave
-        n_waves = plan.stats.n_waves
+    if step_of is None:
+        step_of = plan.req_step
+        n_steps = plan.stats.n_steps
     lv_streams = {
         op_id: np.zeros(plan.op_nreq[op_id], dtype=np.float64)
         for op_id, s in plan.op_is_store.items() if not s
     }
-    order = np.argsort(wave_of, kind="stable")
-    bounds = np.searchsorted(wave_of[order], np.arange(n_waves + 1))
+    order = np.argsort(step_of, kind="stable")
+    bounds = np.searchsorted(step_of[order], np.arange(n_steps + 1))
     steps = 0
-    for w in range(n_waves):
+    for w in range(n_steps):
         if max_steps is not None and steps >= max_steps:
             return steps, False
         batch = order[bounds[w]:bounds[w + 1]]
         store_sel = np.nonzero(plan.req_store[batch])[0]
         stores = batch[store_sel]
         # compute: store values/valid from op tables (deps are filled —
-        # contract 1). Grouped per op for vectorized closure eval.
+        # contract 5). Grouped per op for vectorized closure eval.
         sval = np.zeros(len(batch), dtype=np.float64)
         write = np.zeros(len(batch), dtype=bool)
         for op_i in np.unique(plan.req_op[stores]):
@@ -581,10 +684,11 @@ def _replay_numpy(plan: WavePlan, arrays: dict[str, np.ndarray]):
     same op-table compute, same flat image; the memory step is a numpy
     gather + masked scatter. Every §6 valid bit, store value and
     gathered load is pinned request-exact against the oracle reference
-    streams — "validated by construction": effects apply in wave order
-    and conflicting requests never share a wave, so agreement proves
-    the partition, dep maps and compute bodies together reproduce
-    sequential semantics.
+    streams — "validated by construction": effects apply in step order,
+    conflicting requests never share a step (except the WAR pair the
+    gather-before-scatter ordering resolves), so agreement proves the
+    partition, the batching, the dep maps and the compute bodies
+    together reproduce sequential semantics.
     """
     mem = flat_image(plan, arrays)
 
@@ -604,6 +708,7 @@ def execute(
     trace_mode: str = "auto",
     speculation: str = "off",
     backend: str = "numpy",
+    batch_waves: bool = True,
 ) -> ExecResult:
     """Wave-partitioned fused execution of ``program``.
 
@@ -624,10 +729,14 @@ def execute(
     (load-dependent trips/addresses, DESIGN.md §10): the wave partition
     works off the *true* post-squash request stream — phantom squash
     traffic is a DU-timing artifact and has no wave-executor analogue.
+
+    ``batch_waves`` (default on) lets both backends execute batched
+    conflict-free wave runs as single steps (WavePlan contract 5);
+    ``False`` forces one step per wave. Final arrays are identical.
     """
     plan = build_wave_plan(
         program, arrays, params, trace_mode=trace_mode,
-        speculation=speculation,
+        speculation=speculation, batch_waves=batch_waves,
     )
     if backend == "numpy":
         out = _replay_numpy(plan, arrays)

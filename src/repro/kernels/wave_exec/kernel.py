@@ -1,26 +1,34 @@
-"""Pallas TPU kernel: one fused wave as a gather→scatter step
+"""Pallas TPU kernels: batched wave steps as gather→scatter
 (DESIGN.md §2 → the backend half of the WavePlan contract).
 
-A wave is a conflict-free batch of memory requests (no two touch the
-same address unless both are loads), so the whole batch executes
-data-parallel against a flat protected-memory image:
+A step is a batch of conflict-free waves (WavePlan contract 5): no two
+requests touch the same address except loads with loads and the WAR
+pair whose load's wave strictly precedes the store's. The whole batch
+therefore executes data-parallel against a flat protected-memory image
+with gather strictly before scatter:
 
-    load_vals[i] = mem[addr[i]]                        (gather)
+    load_vals[i] = mem[addr[i]]                        (gather, pre-step)
     mem[addr[i]] = sval[i]   where is_store & valid    (scatter)
 
 Bit-exactness is by construction: the kernel only *moves* data. The
 f64 memory image travels as ``(M, 2)`` uint32 bit-pattern rows — TPUs
 have no f64 ALU, but a DU does not compute either; it disambiguates
 and moves. Store values arrive precomputed by the op tables
-(``core/optable``) from the gathers of *strictly earlier* waves
-(WavePlan contract 1), which is what makes the single-kernel
-gather+scatter sound: nothing computed in this wave feeds a store of
-this wave.
+(``core/optable``) from the gathers of *strictly earlier* steps
+(contract 5), which is what makes the single-kernel gather+scatter
+sound: nothing gathered in this step feeds a store of this step.
 
-The scatter writes back the gathered row for non-store lanes
-(semantic no-op — contract 2 guarantees no store shares their
-address), so the whole update is one vectorized masked scatter rather
-than a serialized in-kernel loop.
+The scatter touches **only write lanes**: every non-write lane (loads,
+§6-invalid stores, padding) is redirected to the scratch row ``M - 1``
+past the real image, so a load may share a real address with a store
+in the same step (the batch-internal WAR) without racing it through a
+duplicate-index scatter. Scratch-row content is never observed — pad
+lanes gather it and the caller discards those lanes.
+
+``wave_loop`` drives a whole *segment* of equal-width steps through one
+``jax.lax.fori_loop`` over the stacked per-step tables, so the host
+dispatches one call per segment instead of one per step — step count
+stops dominating wall-clock (ROADMAP item 1).
 """
 
 from __future__ import annotations
@@ -36,38 +44,21 @@ def _wave_kernel(mem_ref, addr_ref, write_ref, sval_ref, out_mem_ref,
                  vals_ref):
     mem = mem_ref[...]  # (M, 2) uint32 f64 bit patterns
     addr = addr_ref[...]  # (W,) int32 in [0, M); see wave_step contract
-    rows = jnp.take(mem, addr, axis=0, mode="clip")  # gather (pre-wave)
+    rows = jnp.take(mem, addr, axis=0, mode="clip")  # gather (pre-step)
     vals_ref[...] = rows
-    write = write_ref[...][:, None] == 1  # (W, 1) store & valid & !pad
-    upd = jnp.where(write, sval_ref[...], rows)
-    # conflict-freedom (WavePlan contract 2) makes duplicate indices
-    # benign: duplicates are load lanes writing back identical rows
-    out_mem_ref[...] = mem.at[addr].set(upd)
+    write = write_ref[...] == 1  # (W,) store & valid & !pad
+    # scatter only write lanes; everything else lands on the scratch
+    # row M-1, whose content is never observed (module doc)
+    scat = jnp.where(write, addr, mem.shape[0] - 1)
+    out_mem_ref[...] = mem.at[scat].set(
+        jnp.where(write[:, None], sval_ref[...], mem[-1])
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def wave_step(
-    mem: jax.Array,   # (M, 2) uint32 — f64 memory image bit patterns
-    addr: jax.Array,  # (W,) int32 flat addresses in [0, M)
-    write: jax.Array,  # (W,) int32 1 = valid store lane, 0 = load/pad
-    sval: jax.Array,  # (W, 2) uint32 — precomputed store value patterns
-    *,
-    interpret: bool = False,
-) -> tuple[jax.Array, jax.Array]:
-    """Execute one wave; returns (new mem image, gathered rows).
-
-    Caller contract: every lane's address must be in [0, M) and no two
-    lanes may share an address unless all of them are load lanes —
-    *including pad lanes*, because every non-write lane scatters its
-    gathered row back. ``ops._run`` satisfies this by appending one
-    scratch row past the image and pointing all pad lanes at it; a pad
-    address that aliased a real store's address would race it through
-    the duplicate-index scatter. Gathered rows are returned for every
-    lane; the caller keeps only the load lanes.
-    """
+def _step_call(mem, addr, write, sval, interpret):
     m = mem.shape[0]
     w = addr.shape[0]
-    out_mem, vals = pl.pallas_call(
+    return pl.pallas_call(
         _wave_kernel,
         in_specs=[
             pl.BlockSpec((m, 2), lambda: (0, 0)),
@@ -85,4 +76,60 @@ def wave_step(
         ],
         interpret=interpret,
     )(mem, addr.astype(jnp.int32), write.astype(jnp.int32), sval)
-    return out_mem, vals
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wave_step(
+    mem: jax.Array,   # (M, 2) uint32 — f64 memory image bit patterns
+    addr: jax.Array,  # (W,) int32 flat addresses in [0, M)
+    write: jax.Array,  # (W,) int32 1 = valid store lane, 0 = load/pad
+    sval: jax.Array,  # (W, 2) uint32 — precomputed store value patterns
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Execute one batched step; returns (new mem image, gathered rows).
+
+    Caller contract: every lane's address must be in [0, M) and no two
+    *write* lanes may share an address (WavePlan contract 5 — one
+    valid store per address per step). Non-write lanes never scatter
+    (they are redirected to the scratch row M-1), so load and pad
+    lanes may freely alias any address. Gathered rows are returned for
+    every lane against the pre-step image; the caller keeps only the
+    load lanes.
+    """
+    return _step_call(mem, addr, write, sval, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wave_loop(
+    mem: jax.Array,    # (M, 2) uint32 — f64 memory image bit patterns
+    addrs: jax.Array,  # (S, W) int32 per-step flat addresses
+    writes: jax.Array,  # (S, W) int32 per-step write masks
+    svals: jax.Array,  # (S, W, 2) uint32 per-step store value patterns
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Execute S equal-width steps as one ``jax.lax.fori_loop``.
+
+    The per-step tables are precomputed on the host from the WavePlan's
+    step offsets (``kernels/wave_exec/ops.py`` stacks them per
+    segment); the loop body indexes them by step and chains the memory
+    image through the carry — no host round-trip between steps. Pad
+    steps (all lanes scratch, no writes) are no-ops, so the caller may
+    pad S to a bucket size to bound compile count. Returns (final mem
+    image, (S, W, 2) gathered rows per step).
+    """
+
+    def body(s, carry):
+        cur, vals = carry
+        nxt, v = _step_call(
+            cur,
+            jax.lax.dynamic_index_in_dim(addrs, s, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(writes, s, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(svals, s, 0, keepdims=False),
+            interpret,
+        )
+        return nxt, jax.lax.dynamic_update_index_in_dim(vals, v, s, 0)
+
+    vals0 = jnp.zeros(svals.shape, jnp.uint32)
+    return jax.lax.fori_loop(0, addrs.shape[0], body, (mem, vals0))

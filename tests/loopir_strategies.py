@@ -235,6 +235,99 @@ def random_spec_program(rng, max_rows: int = 6):
     return prog, arrays, {}
 
 
+def random_wave_program(rng, max_depth: int = 2):
+    """Random *executable* programs for the wave-plan property suite
+    (tests/test_wave_plan.py): protected loads and stores over two
+    arrays with affine and gathered (data-dependent) addresses, store
+    values/§6 guards fed by LoadVals of same-body or ancestor-body
+    loads, and the usual zero-trip/param/outer-dependent loop shapes.
+    Unlike ``random_affine_program`` every address is bounded by
+    construction (mod the array length), so the program interprets,
+    decouples with speculation *off* (no LoadVal in addresses or
+    trips) and builds a WavePlan end to end."""
+    counter = {"loop": 0, "op": 0}
+    mem = {"A": int(rng.integers(8, 33)), "B": int(rng.integers(8, 33))}
+    arrays = {
+        "A": rng.standard_normal(mem["A"]),
+        "B": rng.standard_normal(mem["B"]),
+        "idx_a": rng.integers(0, 64, size=_N_IDX).astype(np.int64),
+        "trips": rng.integers(0, 4, size=_N_IDX).astype(np.int64),
+        "vals": rng.standard_normal(_N_IDX),
+    }
+    params = {"P": int(rng.integers(0, 6))}
+
+    def addr(vars_visible, arr):
+        base = _affine_term(rng, vars_visible) + _affine_term(
+            rng, vars_visible
+        )
+        if rng.integers(0, 2):
+            base = ir.Read(
+                "idx_a", ir.Bin("%", base, ir.Const(_N_IDX))
+            ) + _affine_term(rng, vars_visible)
+        return ir.Bin("%", base, ir.Const(mem[arr]))
+
+    def make_op(vars_visible, loads):
+        counter["op"] += 1
+        oid = f"m{counter['op']}"
+        arr = _choice(rng, ["A", "B"])
+        a = addr(vars_visible, arr)
+        if loads and rng.integers(0, 2):
+            # store fed by a visible (same- or ancestor-body) load
+            val = ir.LoadVal(_choice(rng, loads)) * 0.5 + float(
+                rng.integers(0, 3)
+            )
+            if len(loads) > 1 and rng.integers(0, 2):
+                val = val + ir.LoadVal(_choice(rng, loads))
+            guard = None
+            g = int(rng.integers(0, 3))
+            if g == 1:
+                guard = ir.Bin(
+                    ">",
+                    ir.Read("trips", ir.Bin(
+                        "%", _affine_term(rng, vars_visible),
+                        ir.Const(_N_IDX),
+                    )),
+                    ir.Const(int(rng.integers(0, 3))),
+                )
+            elif g == 2:
+                guard = ir.Bin(
+                    ">", ir.LoadVal(_choice(rng, loads)), ir.Const(0.0)
+                )
+            return ir.Store(oid, arr, a, val, guard=guard)
+        if rng.integers(0, 2):
+            loads.append(oid)
+            return ir.Load(oid, arr, a)
+        # load-free store (CU value chain)
+        val = ir.Read(
+            "vals",
+            ir.Bin("%", _affine_term(rng, vars_visible), ir.Const(_N_IDX)),
+        ) + float(rng.integers(0, 3))
+        return ir.Store(oid, arr, a, val)
+
+    def make_loop(depth, outer_vars, outer_loads):
+        counter["loop"] += 1
+        var = f"v{counter['loop']}"
+        visible = outer_vars + [var]
+        loads = list(outer_loads)  # ancestor-body loads stay visible
+        body = [
+            make_op(visible, loads) for _ in range(int(rng.integers(1, 4)))
+        ]
+        if depth < max_depth and rng.integers(0, 2):
+            body.append(make_loop(depth + 1, visible, loads))
+        return ir.Loop(
+            var,
+            _trip_expr(rng, outer_vars),
+            tuple(body),
+            predictable=bool(rng.integers(0, 2)),
+        )
+
+    loops = tuple(
+        make_loop(1, [], []) for _ in range(int(rng.integers(1, 3)))
+    )
+    prog = ir.Program("wavefuzz", loops=loops, params=("P",))
+    return prog, arrays, params
+
+
 def random_loadfree_cu_program(rng, max_depth: int = 2):
     """Random programs whose PEs are all load-free value chains: stores
     with vectorizable values and (sometimes) §6 guards — the dae.VecCU
@@ -315,4 +408,11 @@ if HAVE_HYPOTHESIS:
         seed = draw(st.integers(0, 2**31))
         return random_spec_program(
             np.random.default_rng(seed), max_rows=max_rows
+        )
+
+    @st.composite
+    def wave_programs(draw, max_depth: int = 2):
+        seed = draw(st.integers(0, 2**31))
+        return random_wave_program(
+            np.random.default_rng(seed), max_depth=max_depth
         )
