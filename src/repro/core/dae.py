@@ -40,6 +40,14 @@ class LossOfDecoupling(Exception):
     """Raised when an AGU would depend on a protected load value."""
 
 
+class CUContractError(RuntimeError):
+    """Internal-contract violation between an engine and a CU: a call
+    the CU's protocol forbids (e.g. ``feed`` on a load-free ``VecCU``,
+    or script-recording a FIFO-coupled PE whose consumption order is
+    timing-dependent). A mis-wired CU factory fails loudly here instead
+    of corrupting the value stream."""
+
+
 SPECULATION_MODES = ("off", "auto")
 
 
@@ -280,13 +288,27 @@ class CU:
     generator; *load-free value chains* take the vectorized ``VecCU``
     path instead (``make_cu`` decides)."""
 
-    def __init__(self, pe: PE, arrays, params):
+    def __init__(self, pe: PE, arrays, params, fifo_edges=()):
         self.pe = pe
         self.arrays = arrays
         self.params = params
         self.time = 0
         self.done = False
-        self.waiting_on: Optional[str] = None
+        # load op id, or ("fifo_pop", edge idx) / ("fifo_push", edge idx)
+        self.waiting_on: Optional[Union[str, tuple]] = None
+        # value pending for the engine while waiting on a fifo_push
+        self.push_value: float = 0.0
+        # this PE's slice of DAEResult.fifo_edges, in edge-index order
+        self.fifo_in_edges = [
+            (i, name)
+            for i, (_p, c, name, _d) in enumerate(fifo_edges)
+            if c == pe.id
+        ]
+        self.fifo_out_edges = [
+            (i, name)
+            for i, (p, _c, name, _d) in enumerate(fifo_edges)
+            if p == pe.id
+        ]
         self.outbox: list[tuple[str, float, bool]] = []
         self.gen = self._generator()
         self._advance(prime=True)
@@ -306,6 +328,13 @@ class CU:
             # load-dependent trip counts need them, DESIGN.md §10)
             loop = pe.path[d - 1]
             loop_scope = ir._Env(scope)
+            if d == pe.depth:
+                # one pop per consumer leaf instance, at entry — before
+                # the trip/ivars so the engines stall the whole instance
+                # until its token arrives (core/fifo.py token protocol)
+                for eidx, name in self.fifo_in_edges:
+                    v = yield ("fifo_pop", eidx)
+                    loop_scope.define(name, v)
             for iv in loop.ivars:
                 loop_scope.define(iv.name, ev(iv.init, scope, outer_loadvals))
             trip = int(ev(loop.trip, scope, outer_loadvals))
@@ -335,6 +364,12 @@ class CU:
                     loop_scope.vals[iv.name] = (
                         cur + step if iv.op == "+" else cur * step
                     )
+            if d == pe.depth:
+                # one push per producer leaf instance, at exit; a
+                # zero-trip instance pushes the shared-depth init value
+                # (core/fifo.py guarantees that init exists)
+                for eidx, name in self.fifo_out_edges:
+                    yield ("fifo_push", eidx, loop_scope.get(name))
 
         if pe.depth >= 1:
             yield from run_depth(1, ir._Env(), {})
@@ -345,6 +380,13 @@ class CU:
             while True:
                 if item[0] == "need":
                     self.waiting_on = item[1]
+                    return
+                if item[0] == "fifo_pop":
+                    self.waiting_on = ("fifo_pop", item[1])
+                    return
+                if item[0] == "fifo_push":
+                    self.waiting_on = ("fifo_push", item[1])
+                    self.push_value = float(item[2])
                     return
                 item = next(self.gen)  # pragma: no cover (stores don't yield)
         except StopIteration:
@@ -413,13 +455,20 @@ class VecCU:
             (op_id, v, ok) for _s, op_id, v, ok in flat
         ]
 
-    def feed(self, value: float, at_time: int):  # pragma: no cover
-        raise AssertionError("VecCU has no loads; feed() must never be called")
+    def feed(self, value: float, at_time: int):
+        raise CUContractError(
+            f"PE {self.pe.id}: feed({value!r}) on a load-free VecCU — "
+            "the engine delivered a value no load requested"
+        )
 
 
-def make_cu(pe: PE, arrays, params, trace_mode: str = "auto"):
+def make_cu(pe: PE, arrays, params, trace_mode: str = "auto", fifo_edges=()):
     """CU factory: vectorized value stream for load-free PEs, the
-    generator otherwise (or always, under ``trace_mode="interp"``)."""
+    generator otherwise (or always, under ``trace_mode="interp"``).
+    FIFO-coupled PEs always take the generator: their pop/push yields
+    interleave with the engine's queue service (DESIGN.md §11)."""
+    if pe.fifo_in or pe.fifo_out:
+        return CU(pe, arrays, params, fifo_edges)
     if trace_mode != "interp":
         from repro.core import affine
 
@@ -476,6 +525,13 @@ def record_cu_script(
     the recorded emission sequence is what any simulation of this
     (program, arrays, params) would produce.
     """
+    if pe.fifo_in or pe.fifo_out:
+        raise CUContractError(
+            f"PE {pe.id}: cannot record a CU script for a FIFO-coupled "
+            "PE — its pop/push interleaving is engine-serviced, not an "
+            "oracle load stream (the DSE planner must not share CU "
+            "scripts for streaming programs)"
+        )
     cu = make_cu(pe, arrays, params, trace_mode)
     feeds: list[str] = []
     offsets: list[int] = [len(cu.outbox)]
@@ -598,6 +654,17 @@ def _split_agu_cu(
                 (n, what) for n in sorted(ls - needed_locals)
             )
 
+    streamed = sorted(needed_locals & pe.fifo_in)
+    if streamed:
+        # a FIFO token arrives through the CU's pop path — an AGU
+        # address/trip reading it could never run ahead. Raised in both
+        # speculation modes: the speculative AGU predicts load ports,
+        # not cross-PE streams
+        raise LossOfDecoupling(
+            f"PE {pe.id}: AGU depends on cross-PE streamed local(s) "
+            f"{streamed} — FIFO values cannot feed addresses or trips"
+        )
+
     agu_count = 0
     cu_count = 0
     for s, _d in pe.stmts:
@@ -624,7 +691,10 @@ def _split_agu_cu(
                 f"PE — cross-PE speculation is not supported"
             )
         if speculation == "off":
-            raise LossOfDecoupling(spec_reasons[0])
+            # every reason, not just the first: a program can lose
+            # decoupling through several expressions at once and the
+            # user should see the full repair surface in one round
+            raise LossOfDecoupling("; ".join(spec_reasons))
         spec = SpecInfo(
             pe_id=pe.id,
             loads=tuple(sorted(spec_loads)),

@@ -45,6 +45,7 @@ import numpy as np
 from repro.core import coarsen as coarsenlib
 from repro.core import dae as daelib
 from repro.core import du as dulib
+from repro.core import fifo as fifolib
 from repro.core import schedule as schedlib
 
 SENTINEL = int(schedlib.SENTINEL)
@@ -204,12 +205,26 @@ class EventEngine:
         else:
             self.cus = {
                 pe.id: daelib.make_cu(
-                    pe, self.mem, params, getattr(comp, "trace_mode", "auto")
+                    pe, self.mem, params, getattr(comp, "trace_mode", "auto"),
+                    fifo_edges=comp.dae.fifo_edges,
                 )
                 for pe in comp.dae.pes
             }
         # loads popped from pending, queued for in-order CU delivery
         self.ready_loads: dict[str, deque] = {op: deque() for op in traces}
+        # bounded cross-PE FIFO queues (core/fifo, DESIGN.md §11); serviced
+        # from _deliver when a CU's waiting_on is a ("fifo_pop"|"fifo_push",
+        # edge) tuple instead of a load op id
+        self.fifos: dict[int, fifolib.FifoQueue] = {}
+        if getattr(comp, "fifo", None):
+            fifolib.check_depth(comp.fifo, p.fifo_depth)
+            self.fifos = {
+                e.idx: fifolib.FifoQueue(e, p.fifo_depth, p.fifo_latency)
+                for e in comp.fifo.edges
+            }
+            # CUs can be fifo-blocked at t=0 with no load event ever due
+            # (e.g. a load-free producer): give every PE one initial visit
+            self.deliver_dirty.update(pe.id for pe in comp.dae.pes)
 
         if self.sequential:
             if shared is not None and shared.rank_table is not None:
@@ -276,6 +291,7 @@ class EventEngine:
             self._settle()
         self.result.cycles = self.now
         self.result.arrays = self.mem
+        self.result.fifo_stats = [q.stats() for q in self.fifos.values()]
         return self.result
 
     def _all_done(self):
@@ -295,6 +311,11 @@ class EventEngine:
             )
         for pe_id, cu in self.cus.items():
             lines.append(f"  cu{pe_id}: done={cu.done} waiting={cu.waiting_on}")
+        for q in self.fifos.values():
+            lines.append(
+                f"  fifo {q.edge.describe()}: occ={q.occupancy}/{q.depth}"
+                f" pushed={q.pushed} popped={q.popped}"
+            )
         raise RuntimeError("\n".join(lines))
 
     # -- settle: fixpoint of combinational progress at self.now -----------
@@ -696,6 +717,10 @@ class EventEngine:
             self.dirty.add(payload)
         elif kind == "spec_fire":
             self._fire_gate(payload)
+        elif kind == "fifo_tick":
+            # a queued FIFO token matured (or a push landed): revisit the
+            # PE named in the payload so _deliver can unblock it
+            self.deliver_dirty.add(payload)
         else:  # pragma: no cover
             raise ValueError(kind)
 
@@ -787,6 +812,12 @@ class EventEngine:
         for pe_id in pes:
             cu = self.cus[pe_id]
             while cu.waiting_on is not None:
+                if isinstance(cu.waiting_on, tuple):
+                    # FIFO wait (DESIGN.md §11): ("fifo_pop"|"fifo_push", e)
+                    if not self._service_fifo_wait(pe_id, cu):
+                        break
+                    progressed = True
+                    continue
                 q = self.ready_loads.get(cu.waiting_on)
                 if not q:
                     break
@@ -795,6 +826,30 @@ class EventEngine:
                 self._drain_outbox(cu)
                 progressed = True
         return progressed
+
+    def _service_fifo_wait(self, pe_id: int, cu) -> bool:
+        """Try to satisfy one FIFO pop/push wait; False → still blocked."""
+        kind, eidx = cu.waiting_on
+        q = self.fifos[eidx]
+        if kind == "fifo_pop":
+            if not q.head_ready(self.now):
+                if q.q:
+                    # token in flight: wake this consumer when it matures
+                    self._post(q.next_ready_time(), "fifo_tick", pe_id)
+                q.pop_stalls += 1
+                return False
+            cu.feed(q.pop(self.now), self.now)
+            # a slot freed: a producer backpressured on this edge can go
+            self.deliver_dirty.add(q.edge.prod_pe)
+        else:  # fifo_push
+            if not q.can_push():
+                q.push_stalls += 1
+                return False
+            q.push(cu.push_value, self.now)
+            self._post(self.now + q.latency, "fifo_tick", q.edge.cons_pe)
+            cu.feed(0.0, self.now)  # push ack; value is ignored
+        self._drain_outbox(cu)
+        return True
 
     def _drain_outbox(self, cu):  # daelib.CU or daelib.VecCU
         for op_id, v, valid in cu.outbox:

@@ -148,6 +148,11 @@ class WavePlan:
     base: dict[str, int]
     mem_size: int
     stats: WaveStats = None
+    # cross-PE FIFO edge metadata (DESIGN.md §11): one dict per edge
+    # with idx/prod_pe/cons_pe/local/depth/base/n_tokens/push_op/pop_op;
+    # the edge's circular slots live at [base, base+depth) inside
+    # mem_size (zero-init, not in array_order)
+    fifo_edges: list = dataclasses.field(default_factory=list)
 
     @property
     def n_requests(self) -> int:
@@ -235,6 +240,7 @@ def build_wave_plan(
     trace_mode: str = "auto",
     speculation: str = "off",
     batch_waves: bool = True,
+    fifo_depth: int = 4,
 ) -> WavePlan:
     """Run the AGU/CU front-end and emit the backend-consumable plan.
 
@@ -254,13 +260,32 @@ def build_wave_plan(
     ``batch_waves`` (default on) coarsens the wave partition into
     batched steps (WavePlan contract 5); ``False`` keeps one step per
     wave — the partition itself is identical either way.
+
+    Cross-PE FIFO edges (DESIGN.md §11) become ``fifo_depth`` circular
+    pseudo-memory slots per edge, appended after the real arrays in the
+    flat image: each push is a store-like pseudo-request (``~push:K``)
+    and each pop a load-like one (``~pop:K``) at slot ``token %
+    fifo_depth``, so the ordinary same-address sweep yields the
+    producer-before-consumer dep edge (slot RAW) *and* bounded
+    backpressure (slot WAW/WAR: push ``k+depth`` lands strictly after
+    pop ``k``) — ``validate_plan`` asserts both per edge.
     """
     params = params or {}
 
     from repro.core import coarsen as coarsenlib
     from repro.core import dae as daelib
+    from repro.core import fifo as fifolib
 
     dae = daelib.decouple(program, speculation=speculation)
+    fifo_spec = None
+    if dae.fifo_edges:
+        if dae.spec:
+            raise NotImplementedError(
+                "cross-PE FIFO streaming cannot combine with speculative "
+                "AGUs (loss-of-decoupling PEs) in the wave executor"
+            )
+        fifo_spec = fifolib.analyze_program(program, dae)
+        fifolib.check_depth(fifo_spec, fifo_depth)
     # the flat image and the op-table closures compute in f64; a
     # narrower protected array would make the oracle round every store
     # to the array dtype and the backends diverge in the last ulp —
@@ -272,7 +297,19 @@ def build_wave_plan(
                 f"wave executor requires float64 protected arrays: "
                 f"'{arr}' is {arrays[arr].dtype}"
             )
-    tables = optablelib.compile_store_tables(program)
+    # consumer stores reading streamed locals compile those to CDeps on
+    # the pseudo pop ops (optable stream_deps, DESIGN.md §11)
+    stream_deps: dict[str, dict[str, str]] = {}
+    if fifo_spec:
+        for op, _path in program.mem_ops():
+            if not op.is_store:
+                continue
+            ins = fifo_spec.in_edges.get(dae.op_to_pe[op.id], ())
+            if ins:
+                stream_deps[op.id] = {
+                    name: f"~pop:{eidx}" for eidx, name in ins
+                }
+    tables = optablelib.compile_store_tables(program, stream_deps or None)
     aux_exprs = {
         op_id: t.env_exprs for op_id, t in tables.items() if t.env_exprs
     }
@@ -286,11 +323,18 @@ def build_wave_plan(
     }
     counts: dict[str, int] = {}
     interp_stream: list[tuple[str, int, bool]] = []
+    # FIFO token capture: (pos in the real request stream, kind, edge
+    # idx, token value) — pops fire at consumer leaf-instance entry
+    # (before the instance's own requests), pushes at producer instance
+    # exit (after them); same-pos events keep chronological order
+    fifo_events: list[tuple[int, str, int, float]] = []
+    n_real = [0]
 
     def aux_hook(op_id, values):
         env_rows[op_id].append(values)
 
     def hook(op_id, addr, is_store, valid, value):
+        n_real[0] += 1
         per_op_vv.setdefault(op_id, []).append((valid, value))
         if is_store:
             for ld, rows in dep_rows[op_id].items():
@@ -302,6 +346,32 @@ def build_wave_plan(
                 load_streams.setdefault(op_id, []).append(value)
         if trace_mode == "interp":
             interp_stream.append((op_id, addr, is_store))
+
+    loop_hook = None
+    if fifo_spec:
+        push_leaves: dict[int, list] = {}
+        pop_leaves: dict[int, list] = {}
+        for e in fifo_spec.edges:
+            push_leaves.setdefault(id(dae.pes[e.prod_pe].leaf), []).append(e)
+            pop_leaves.setdefault(id(dae.pes[e.cons_pe].leaf), []).append(e)
+
+        def loop_hook(loop, phase, reader):
+            if phase == "enter":
+                for e in pop_leaves.get(id(loop), ()):
+                    # the enclosing scope holds the producer's token
+                    # value (sequential semantics); counts updates live
+                    # so a consumer store's dep row sees its own pop
+                    o = f"~pop:{e.idx}"
+                    counts[o] = counts.get(o, 0) + 1
+                    fifo_events.append(
+                        (n_real[0], "pop", e.idx, float(reader(e.local)))
+                    )
+            else:
+                for e in push_leaves.get(id(loop), ()):
+                    # zero-trip instances still push: the init value
+                    fifo_events.append(
+                        (n_real[0], "push", e.idx, float(reader(e.local)))
+                    )
 
     if dae.spec:
         # speculative programs get the documented auto-reject
@@ -315,7 +385,7 @@ def build_wave_plan(
     else:
         ir.interpret(
             program, arrays, params, trace_hook=hook,
-            aux_exprs=aux_exprs, aux_hook=aux_hook,
+            aux_exprs=aux_exprs, aux_hook=aux_hook, loop_hook=loop_hook,
         )
 
     if trace_mode != "interp":
@@ -333,11 +403,59 @@ def build_wave_plan(
         req_addr_l = [r[1] for r in interp_stream]
         req_store_l = [r[2] for r in interp_stream]
 
-    n = len(req_op_l)
-    op_index = {op.id: i for i, (op, _) in enumerate(program.mem_ops())}
     op_ids = [op.id for op, _ in program.mem_ops()]
     op_array = {op.id: op.array for op, _ in program.mem_ops()}
     op_is_store = {op.id: op.is_store for op, _ in program.mem_ops()}
+
+    # merge the FIFO token events into the request stream as pseudo
+    # requests on the edge's circular slots (module docstring) — after
+    # the trace-count assert, which covers real requests only
+    push_k: dict[int, int] = {}
+    if fifo_events:
+        pop_k: dict[int, int] = {}
+        m_op: list[str] = []
+        m_addr: list[int] = []
+        m_store: list[bool] = []
+        ev = 0
+        for pos in range(len(req_op_l) + 1):
+            while ev < len(fifo_events) and fifo_events[ev][0] == pos:
+                _p, kind, eidx, value = fifo_events[ev]
+                ev += 1
+                if kind == "push":
+                    o = f"~push:{eidx}"
+                    k = push_k.get(eidx, 0)
+                    push_k[eidx] = k + 1
+                    m_store.append(True)
+                else:
+                    o = f"~pop:{eidx}"
+                    k = pop_k.get(eidx, 0)
+                    pop_k[eidx] = k + 1
+                    m_store.append(False)
+                m_op.append(o)
+                m_addr.append(k % fifo_depth)
+                per_op_vv.setdefault(o, []).append((True, value))
+            if pos < len(req_op_l):
+                m_op.append(req_op_l[pos])
+                m_addr.append(req_addr_l[pos])
+                m_store.append(req_store_l[pos])
+        req_op_l, req_addr_l, req_store_l = m_op, m_addr, m_store
+    if fifo_spec:
+        for e in fifo_spec.edges:
+            for o, st in ((f"~push:{e.idx}", True), (f"~pop:{e.idx}", False)):
+                op_ids.append(o)
+                op_array[o] = f"~fifo:{e.idx}"
+                op_is_store[o] = st
+            po = f"~push:{e.idx}"
+            tables[po] = optablelib.StoreTable(
+                op_id=po, array=f"~fifo:{e.idx}", deps=(),
+                env_exprs=(ir.Local(e.local),),  # descriptive; slot 0 is
+                value=optablelib.CEnv(0),        # the captured token
+                guard=None, frozen_reads=(),
+            )
+            dep_rows[po] = {}
+
+    n = len(req_op_l)
+    op_index = {o: i for i, o in enumerate(op_ids)}
 
     req_op = np.fromiter(
         (op_index[o] for o in req_op_l), dtype=np.int32, count=n
@@ -377,6 +495,17 @@ def build_wave_plan(
     # dep-free stores) — feeds the wave-batching admission rule
     feed_max = np.full(n, -1, dtype=np.int64)
 
+    # FIFO pushes carry a CU local: they must land strictly after every
+    # load (and pop) of the producer PE seen so far — tracked as a
+    # running per-PE wave frontier over the load-like requests
+    pe_frontier: dict[int, int] = {}
+    push_pe: dict[str, int] = {}
+    pop_pe: dict[str, int] = {}
+    if fifo_spec:
+        for e in fifo_spec.edges:
+            push_pe[f"~push:{e.idx}"] = e.prod_pe
+            pop_pe[f"~pop:{e.idx}"] = e.cons_pe
+
     for i in range(n):
         o = req_op_l[i]
         key = (op_array[o], req_addr_l[i])
@@ -393,6 +522,9 @@ def build_wave_plan(
                     lw = wave_of_load[ld][m]
                     if lw > fm:
                         fm = lw
+            ppe = push_pe.get(o)
+            if ppe is not None:
+                fm = max(fm, pe_frontier.get(ppe, -1))
             feed_max[i] = fm
             w = max(
                 last_store_wave.get(key, -1) + 1,
@@ -411,6 +543,10 @@ def build_wave_plan(
             w = last_store_wave.get(key, -1) + 1
             loads_since_store[key] = max(loads_since_store.get(key, -1), w)
             wave_of_load.setdefault(o, []).append(w)
+            if fifo_spec:
+                pe_of = pop_pe.get(o, dae.op_to_pe.get(o))
+                if pe_of is not None and w > pe_frontier.get(pe_of, -1):
+                    pe_frontier[pe_of] = w
         waves[i] = w
 
     n_waves = int(waves.max()) + 1 if n else 0
@@ -420,12 +556,27 @@ def build_wave_plan(
     # after the layout pass)
 
     # --- flat protected-memory layout ------------------------------------
-    protected = sorted({op_array[o] for o in op_ids})
+    # real arrays first; each FIFO edge then gets ``fifo_depth`` circular
+    # slots inside ``mem_size`` (zero-init in the flat image, never
+    # unpacked — ``array_order`` stays real-only), so backends execute
+    # FIFO traffic as ordinary gathers/scatters without special cases
+    protected = sorted({op.array for op, _ in program.mem_ops()})
     base: dict[str, int] = {}
     off = 0
     for a in protected:
         base[a] = off
         off += len(arrays[a])
+    fifo_meta: list[dict] = []
+    if fifo_spec:
+        for e in fifo_spec.edges:
+            base[f"~fifo:{e.idx}"] = off
+            fifo_meta.append({
+                "idx": e.idx, "prod_pe": e.prod_pe, "cons_pe": e.cons_pe,
+                "local": e.local, "depth": int(fifo_depth),
+                "base": off, "n_tokens": push_k.get(e.idx, 0),
+                "push_op": f"~push:{e.idx}", "pop_op": f"~pop:{e.idx}",
+            })
+            off += fifo_depth
     op_base = np.asarray(
         [base[op_array[o]] for o in op_ids], dtype=np.int64
     ) if op_ids else np.zeros(0, dtype=np.int64)
@@ -438,6 +589,15 @@ def build_wave_plan(
         ]
         for op_id, rows in env_rows.items()
     }
+    if fifo_spec:
+        # push "stores" compute through a one-slot env stream: the
+        # captured token values, in push order
+        for e in fifo_spec.edges:
+            env[f"~push:{e.idx}"] = [np.asarray(
+                [v for _p, kind, ei, v in fifo_events
+                 if kind == "push" and ei == e.idx],
+                dtype=np.float64,
+            )]
     dep_maps = {
         op_id: {ld: np.asarray(rows, dtype=np.int64)
                 for ld, rows in per_ld.items()}
@@ -465,7 +625,7 @@ def build_wave_plan(
         req_wave=waves, req_step=req_step, req_ordinal=req_ordinal,
         tables=tables, env=env, dep_maps=dep_maps,
         array_order=protected, base=base, mem_size=off,
-        stats=stats,
+        stats=stats, fifo_edges=fifo_meta,
     )
 
 
@@ -570,6 +730,30 @@ def validate_plan(plan: WavePlan) -> None:
     assert n == 0 or int(waves.max()) + 1 == plan.stats.n_waves
     assert n == 0 or int(steps.max()) + 1 == plan.stats.n_steps
     assert plan.stats.n_steps <= plan.stats.n_waves or n == 0
+    # FIFO edges (DESIGN.md §11): per edge, producer-before-consumer
+    # ordering and bounded backpressure over the token sequence
+    for fe in plan.fifo_edges:
+        prow = np.nonzero(plan.req_op == plan.op_ids.index(fe["push_op"]))[0]
+        crow = np.nonzero(plan.req_op == plan.op_ids.index(fe["pop_op"]))[0]
+        assert len(prow) == len(crow) == fe["n_tokens"], (
+            f"fifo edge {fe['idx']}: push/pop token counts diverge"
+        )
+        pw = waves[prow][np.argsort(plan.req_ordinal[prow])]
+        cw = waves[crow][np.argsort(plan.req_ordinal[crow])]
+        assert np.all(cw > pw), (
+            f"fifo edge {fe['idx']}: pop not strictly after its push"
+        )
+        d = fe["depth"]
+        if len(pw) > d:
+            assert np.all(pw[d:] > cw[:-d]), (
+                f"fifo edge {fe['idx']}: push overruns the {d}-slot "
+                f"buffer (backpressure violated)"
+            )
+        ps = steps[prow][np.argsort(plan.req_ordinal[prow])]
+        cs = steps[crow][np.argsort(plan.req_ordinal[crow])]
+        assert np.all(cs > ps), (
+            f"fifo edge {fe['idx']}: pop shares a step with its push"
+        )
 
 
 def drive_plan(
@@ -709,6 +893,7 @@ def execute(
     speculation: str = "off",
     backend: str = "numpy",
     batch_waves: bool = True,
+    fifo_depth: int = 4,
 ) -> ExecResult:
     """Wave-partitioned fused execution of ``program``.
 
@@ -733,10 +918,16 @@ def execute(
     ``batch_waves`` (default on) lets both backends execute batched
     conflict-free wave runs as single steps (WavePlan contract 5);
     ``False`` forces one step per wave. Final arrays are identical.
+
+    ``fifo_depth`` sizes every cross-PE FIFO edge's circular slot
+    buffer (DESIGN.md §11). Final arrays are identical for any depth
+    >= 1 — a shallower buffer only tightens backpressure, i.e. grows
+    the wave/step count.
     """
     plan = build_wave_plan(
         program, arrays, params, trace_mode=trace_mode,
         speculation=speculation, batch_waves=batch_waves,
+        fifo_depth=fifo_depth,
     )
     if backend == "numpy":
         out = _replay_numpy(plan, arrays)

@@ -464,6 +464,7 @@ def interpret(
     trace_hook: Optional[Callable] = None,
     aux_exprs: Optional[dict[str, tuple]] = None,
     aux_hook: Optional[Callable] = None,
+    loop_hook: Optional[Callable] = None,
 ) -> dict[str, np.ndarray]:
     """Run the program sequentially; returns the final array state.
 
@@ -484,6 +485,15 @@ def interpret(
     of the §6 valid bit). This is how ``core/optable`` captures the
     environment slots of its partially-evaluated compute bodies without
     leaking memory (LoadVal) values out of the oracle.
+
+    ``loop_hook(loop, phase, reader)`` is called at every loop
+    *instance* boundary — ``phase="enter"`` before the instance's
+    ivars/trip are evaluated, ``phase="exit"`` after its last iteration
+    (a zero-trip instance fires both) — with ``reader(name)`` exposing
+    the enclosing environment's locals. This is how the FIFO token
+    protocol (``core/fifo.py``, DESIGN.md §11) observes the
+    one-token-per-leaf-instance push/pop stream without re-deriving
+    loop structure.
 
     Load values are visible downstream of their ``Load`` within the
     enclosing body *and* inside nested loops of that body — including
@@ -548,6 +558,8 @@ def interpret(
                 raise TypeError(f"unknown stmt {s!r}")
 
     def run_loop(loop: Loop, env: _Env, loadvals):
+        if loop_hook is not None:
+            loop_hook(loop, "enter", env.get)
         outer = _Env(env)
         for iv in loop.ivars:
             outer.define(iv.name, _eval(iv.init, env, arrays, params, loadvals))
@@ -560,6 +572,8 @@ def interpret(
                 cur = outer.get(iv.name)
                 step = _eval(iv.step, inner, arrays, params, loadvals)
                 outer.vals[iv.name] = cur + step if iv.op == "+" else cur * step
+        if loop_hook is not None:
+            loop_hook(loop, "exit", env.get)
         return
 
     top = _Env()

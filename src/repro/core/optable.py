@@ -228,7 +228,23 @@ def _has_loadval(e: ir.Expr) -> bool:
     return False
 
 
-def compile_store_tables(program: ir.Program) -> dict[str, StoreTable]:
+def _has_streamed(e: ir.Expr, streamed: dict) -> bool:
+    """Does ``e`` reference a cross-PE streamed local (FIFO pop value)?"""
+    if isinstance(e, ir.Local):
+        return e.name in streamed
+    if isinstance(e, ir.Bin):
+        return _has_streamed(e.a, streamed) or _has_streamed(e.b, streamed)
+    if isinstance(e, ir.Un):
+        return _has_streamed(e.a, streamed)
+    if isinstance(e, ir.Read):
+        return _has_streamed(e.index, streamed)
+    return False
+
+
+def compile_store_tables(
+    program: ir.Program,
+    stream_deps: Optional[dict[str, dict[str, str]]] = None,
+) -> dict[str, StoreTable]:
     """One ``StoreTable`` per store op of ``program`` (keyed by op id).
 
     Partial evaluation rule: a maximal ``LoadVal``-free subtree becomes
@@ -236,7 +252,16 @@ def compile_store_tables(program: ir.Program) -> dict[str, StoreTable]:
     everything containing a ``LoadVal`` compiles to closure nodes.
     Raises ``OpTableError`` for a load-dependent ``Read`` of an array
     the program also stores to (no frozen snapshot exists).
+
+    ``stream_deps`` maps a store op id to ``{local name: pop op id}``
+    for cross-PE streamed locals (DESIGN.md §11): a ``Local`` in that
+    map is *dynamic* — it compiles to a ``CDep`` on the pseudo pop op
+    instead of an env slot, so the store's value flows through the
+    FIFO slot in memory and the wave plan orders the store after the
+    pop (the producer-before-consumer dep edge ``validate_plan``
+    asserts per edge).
     """
+    stream_deps = stream_deps or {}
     stored_arrays = {
         op.array for op, _ in program.mem_ops() if op.is_store
     }
@@ -248,6 +273,7 @@ def compile_store_tables(program: ir.Program) -> dict[str, StoreTable]:
         env_index: dict[ir.Expr, int] = {}
         deps: list[str] = []
         frozen: list[str] = []
+        streamed = stream_deps.get(op.id, {})
 
         def slot(e: ir.Expr) -> CNode:
             if isinstance(e, ir.Const):
@@ -260,12 +286,17 @@ def compile_store_tables(program: ir.Program) -> dict[str, StoreTable]:
             return CEnv(k)
 
         def comp(e: ir.Expr) -> CNode:
-            if not _has_loadval(e):
+            if not (_has_loadval(e) or _has_streamed(e, streamed)):
                 return slot(e)
             if isinstance(e, ir.LoadVal):
                 if e.load_id not in deps:
                     deps.append(e.load_id)
                 return CDep(e.load_id)
+            if isinstance(e, ir.Local):
+                pop_op = streamed[e.name]
+                if pop_op not in deps:
+                    deps.append(pop_op)
+                return CDep(pop_op)
             if isinstance(e, ir.Bin):
                 return CBin(e.op, comp(e.a), comp(e.b))
             if isinstance(e, ir.Un):

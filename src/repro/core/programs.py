@@ -62,14 +62,21 @@ class Bench:
     # run only under simulate(speculation="auto") (DESIGN.md §10); the
     # DSE result identity folds the speculation axis for the rest
     speculative: bool = False
+    # True for kernels that communicate scalars between PEs over bounded
+    # cross-PE FIFO edges (core/fifo, DESIGN.md §11) — the streaming
+    # benchmark set (benchmarks/bench_stream.py, fifo_depth DSE axis)
+    streaming: bool = False
 
 
 REGISTRY: dict[str, Bench] = {}
 
 
-def _register(name, complexity, default_scale, speculative=False):
+def _register(name, complexity, default_scale, speculative=False,
+              streaming=False):
     def deco(fn):
-        REGISTRY[name] = Bench(name, fn, complexity, default_scale, speculative)
+        REGISTRY[name] = Bench(
+            name, fn, complexity, default_scale, speculative, streaming
+        )
         return fn
 
     return deco
@@ -644,6 +651,133 @@ def chase_sum(scale: int):
     return prog, arrays, {"n": n}
 
 
+# ---------------------------------------------------------------------------
+# streaming kernels: cross-PE scalar FIFO edges (core/fifo, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@_register("stream_dot", "O(nb * k)", 256, streaming=True)
+def stream_dot(scale: int):
+    """Streaming blocked dot-reduction: a reducer leaf accumulates a
+    per-block partial sum in a CU local and streams it over a FIFO edge
+    to a writer leaf that folds it into ``out[b]``. The two leaves share
+    no memory — the producer-before-consumer ordering is carried purely
+    by the bounded FIFO token per block instance."""
+    nb = scale
+    k = 8
+    rng = np.random.default_rng(12)
+    prog = Program(
+        name="stream_dot",
+        loops=(
+            Loop("b", Param("nb", 0, nb), (
+                SetLocal("ps", Const(0.0)),
+                Loop("k", Param("k", 0, k), (
+                    Load("ld_a", "a", V("b") * k + V("k")),
+                    Load("ld_b", "bv", V("b") * k + V("k")),
+                    SetLocal(
+                        "ps",
+                        Local("ps") + LoadVal("ld_a") * LoadVal("ld_b"),
+                    ),
+                )),
+                Loop("w", Const(1), (
+                    Load("ld_o", "out", V("b")),
+                    Store(
+                        "st_o", "out", V("b"),
+                        LoadVal("ld_o") + Local("ps"),
+                    ),
+                )),
+            )),
+        ),
+        params=("nb", "k"),
+    )
+    arrays = {
+        "a": rng.standard_normal(nb * k),
+        "bv": rng.standard_normal(nb * k),
+        "out": rng.standard_normal(nb),
+    }
+    return prog, arrays, {"nb": nb, "k": k}
+
+
+@_register("filter_pipe", "O(n)", 1024, streaming=True)
+def filter_pipe(scale: int):
+    """Two-stage filter pipeline: stage 1 loads and transforms each
+    element into a CU local, stage 2 consumes the streamed value in both
+    the store *value* and its §6 *guard* — a guarded store fed entirely
+    through a FIFO edge (the valid bit is decided by the popped token)."""
+    n = scale
+    rng = np.random.default_rng(13)
+    prog = Program(
+        name="filter_pipe",
+        loops=(
+            Loop("e", Param("n", 0, n), (
+                SetLocal("v", Const(0.0)),
+                Loop("p", Const(1), (
+                    Load("ld_x", "x", V("e")),
+                    SetLocal("v", Un("tanh", LoadVal("ld_x"))),
+                )),
+                Loop("c", Const(1), (
+                    Store(
+                        "st_y", "y", V("e"),
+                        Local("v") * 0.5 + 1.0,
+                        guard=Bin(">", Local("v"), Const(0.0)),
+                    ),
+                )),
+            )),
+        ),
+        params=("n",),
+    )
+    arrays = {
+        "x": rng.standard_normal(n),
+        "y": np.zeros(n, dtype=np.float64),
+    }
+    return prog, arrays, {"n": n}
+
+
+@_register("stream_join", "O(n)", 512, streaming=True)
+def stream_join(scale: int):
+    """Two producers feed a memory-less join PE (no loads, no stores —
+    pure FIFO-in/FIFO-out compute) whose result streams to a writer:
+    a 4-PE dataflow diamond exercising multi-edge fan-in and a
+    chained producer→join→consumer FIFO path."""
+    n = scale
+    rng = np.random.default_rng(14)
+    prog = Program(
+        name="stream_join",
+        loops=(
+            Loop("t", Param("n", 0, n), (
+                SetLocal("a", Const(0.0)),
+                Loop("p1", Const(1), (
+                    Load("ld_u", "u", V("t")),
+                    SetLocal("a", LoadVal("ld_u") * 2.0),
+                )),
+                SetLocal("b", Const(0.0)),
+                Loop("p2", Const(1), (
+                    Load("ld_w", "w", V("t")),
+                    SetLocal("b", LoadVal("ld_w") + 1.0),
+                )),
+                SetLocal("j", Const(0.0)),
+                Loop("m", Const(1), (
+                    SetLocal("j", Local("a") + Local("b")),
+                )),
+                Loop("c", Const(1), (
+                    Load("ld_z", "z", V("t")),
+                    Store(
+                        "st_z", "z", V("t"),
+                        LoadVal("ld_z") + Local("j"),
+                    ),
+                )),
+            )),
+        ),
+        params=("n",),
+    )
+    arrays = {
+        "u": rng.standard_normal(n),
+        "w": rng.standard_normal(n),
+        "z": rng.standard_normal(n),
+    }
+    return prog, arrays, {"n": n}
+
+
 def get(name: str) -> Bench:
     return REGISTRY[name]
 
@@ -673,4 +807,10 @@ TABLE1: tuple[str, ...] = (
 # speculation benchmark set: benchmarks/bench_speculation.py)
 SPEC_KERNELS: tuple[str, ...] = tuple(
     name for name, b in REGISTRY.items() if b.speculative
+)
+
+# the cross-PE FIFO streaming kernels, in registration order (the
+# streaming benchmark set: benchmarks/bench_stream.py, DESIGN.md §11)
+STREAM_KERNELS: tuple[str, ...] = tuple(
+    name for name, b in REGISTRY.items() if b.streaming
 )

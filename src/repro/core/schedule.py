@@ -200,7 +200,17 @@ def trace_program(
             out.update(t.ops)
             continue
         path, reason, cls = "interp", None, None
-        if mode != "interp":
+        if mode != "interp" and pe.fifo_in:
+            # cross-PE FIFO consumers (DESIGN.md §11): streamed locals are
+            # CU-side values the affine compiler has no stream for; the
+            # interpreter walk skips them statically (taint set below)
+            reason = (
+                f"PE {pe.id} consumes cross-PE FIFO local(s) "
+                f"{sorted(pe.fifo_in)} — streamed values are CU-side only"
+            )
+            if mode == "compiled":
+                raise TraceCompileError(reason)
+        elif mode != "interp":
             cls = affine.classify_pe(pe)
             if cls.compilable:
                 try:
@@ -323,6 +333,20 @@ def _trace_pe(
     # parity; previously these silently defaulted to pe.depth / False)
     _, op_depth, op_store = _static_op_meta(pe)
 
+    # cross-PE streamed locals (DESIGN.md §11) and anything derived from
+    # them are CU-side values — the LoD check already rejects address or
+    # trip uses, so the AGU walk must skip those SetLocals entirely
+    tainted = set(pe.fifo_in)
+    changed = True
+    while changed:
+        changed = False
+        for s, _d in pe.stmts:
+            if isinstance(s, ir.SetLocal) and s.name not in tainted:
+                locs, _ = daelib.expr_deps(s.value)
+                if locs & tainted:
+                    tainted.add(s.name)
+                    changed = True
+
     # group the PE's statements by depth
     by_depth: dict[int, list[ir.Stmt]] = {}
     for s, d in pe.stmts:
@@ -379,6 +403,8 @@ def _trace_pe(
             r["seq"].append(seq_counter[0])
             seq_counter[0] += 1
         elif isinstance(s, ir.SetLocal):
+            if s.name in tainted:
+                return  # FIFO-streamed (or derived): CU-side only
             # AGU keeps only address-feeding locals; evaluating all
             # load-free locals is a superset and harmless
             _, lds = daelib.expr_deps(s.value)

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core import dae as daelib
 from repro.core import du as dulib
+from repro.core import fifo as fifolib
 from repro.core import hazards as hz
 from repro.core import loopir as ir
 from repro.core import monotonic as mono
@@ -71,6 +72,11 @@ class SimParams:
     # (hist+add STA: ~110 cycles/iter at 286 MHz).
     sta_mem_dep_ii: int = 160
     pipeline_fill: int = 20  # static pipeline fill/drain per loop instance
+    # cross-PE scalar FIFO edges (core/fifo.py, DESIGN.md §11): slots
+    # per queue (a full queue backpressures its producer) and cycles
+    # from a push to the token becoming poppable
+    fifo_depth: int = 4
+    fifo_latency: int = 1
     max_cycles: int = 50_000_000
 
 
@@ -95,6 +101,9 @@ class SimResult:
     dram_requests: int = 0
     forwards: int = 0
     squashed: int = 0
+    # per-edge FIFO accounting (core/fifo.py stats dicts) for streaming
+    # programs; empty for everything else
+    fifo_stats: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -157,11 +166,31 @@ class Compiled:
         self.trace_mode = trace_mode
         self.speculation = speculation
         self.dae = daelib.decouple(program, speculation=speculation)
+        # cross-PE scalar FIFO edges: the static token-protocol gate
+        # (core/fifo.py, DESIGN.md §11). Programs it admits run with
+        # bounded backpressured queues in both engines; programs it
+        # rejects fall back to the historical NotImplementedError —
+        # now naming every edge (prod PE, cons PE, local, depth)
+        self.fifo = fifolib.FifoSpec(edges=(), in_edges={}, out_edges={})
         if self.dae.fifo_edges:
-            raise NotImplementedError(
-                "cross-PE scalar FIFOs are not modelled; communicate "
-                "cross-loop scalars through a protected array"
+            edge_list = ", ".join(
+                f"(pe{p} -> pe{c}, {name!r}, shared={d})"
+                for p, c, name, d in self.dae.fifo_edges
             )
+            try:
+                self.fifo = fifolib.analyze_program(program, self.dae)
+            except fifolib.FifoRejected as exc:
+                raise NotImplementedError(
+                    "cross-PE scalar FIFO edge(s) outside the "
+                    f"bounded-queue token protocol: {edge_list} — {exc}; "
+                    "communicate such scalars through a protected array"
+                ) from exc
+            if self.dae.spec:
+                raise NotImplementedError(
+                    "speculative AGUs cannot drive cross-PE FIFO "
+                    f"streams (edges {edge_list}): squashed epochs have "
+                    "no token-protocol semantics"
+                )
         self.infos = mono.analyze_program(program)
         self.plan = hz.build_plan(program, self.dae, self.infos, forwarding)
         self.op_array = {op.id: op.array for op, _ in program.mem_ops()}
@@ -254,12 +283,18 @@ def _fusion_groups_sta(comp: Compiled) -> dict[int, int]:
     with identical parents, structurally equal trip counts, and no
     possible cross-PE hazard pair."""
     fuse = {pe.id: pe.id for pe in comp.dae.pes}
+    # a FIFO edge is a scalar dependence between the PEs: a static
+    # scheduler cannot overlap them any more than a hazard pair lets it
+    fifo_pairs = {
+        frozenset((p, c)) for p, c, _name, _d in comp.dae.fifo_edges
+    }
     for a, b in zip(comp.dae.pes, comp.dae.pes[1:]):
         if (
             len(a.path) == len(b.path)
             and a.path[:-1] == b.path[:-1]
             and a.leaf.trip == b.leaf.trip
             and not comp.cross_pe_pairs(a.id, b.id)
+            and frozenset((a.id, b.id)) not in fifo_pairs
         ):
             fuse[b.id] = fuse[a.id]
     return fuse
@@ -377,9 +412,19 @@ class Engine:
         else:
             self.cus = {
                 pe.id: daelib.make_cu(
-                    pe, self.mem, params, getattr(comp, "trace_mode", "auto")
+                    pe, self.mem, params, getattr(comp, "trace_mode", "auto"),
+                    fifo_edges=comp.dae.fifo_edges,
                 )
                 for pe in comp.dae.pes
+            }
+        # bounded backpressured FIFO queues, one per analyzed edge
+        # (core/fifo.py); empty dict for non-streaming programs
+        self.fifos: dict[int, fifolib.FifoQueue] = {}
+        if comp.fifo:
+            fifolib.check_depth(comp.fifo, p.fifo_depth)
+            self.fifos = {
+                e.idx: fifolib.FifoQueue(e, p.fifo_depth, p.fifo_latency)
+                for e in comp.fifo.edges
             }
         self.store_values: dict[str, list[tuple[int, float, bool]]] = {}
         self.ready_loads: dict[str, list[dulib.PendingEntry]] = {}
@@ -447,6 +492,7 @@ class Engine:
                 raise RuntimeError("max_cycles exceeded")
         self.result.cycles = self.now
         self.result.arrays = self.mem
+        self.result.fifo_stats = [q.stats() for q in self.fifos.values()]
         return self.result
 
     def _all_done(self):
@@ -467,6 +513,11 @@ class Engine:
             )
         for pe_id, cu in self.cus.items():
             lines.append(f"  cu{pe_id}: done={cu.done} waiting={cu.waiting_on}")
+        for q in self.fifos.values():
+            lines.append(
+                f"  fifo {q.edge.describe()}: occ={q.occupancy}/{q.depth}"
+                f" pushed={q.pushed} popped={q.popped}"
+            )
         raise RuntimeError("\n".join(lines))
 
     # -- cycle work ---------------------------------------------------------
@@ -491,8 +542,42 @@ class Engine:
         for port in self.ports.values():
             if not port.is_store and self._deliver(port):
                 progressed = True
+        if self.fifos and self._service_fifos():
+            progressed = True
         if self.sequential and self._advance_window():
             progressed = True
+        return progressed
+
+    def _service_fifos(self) -> bool:
+        """Serve CUs blocked on FIFO pops/pushes (DESIGN.md §11).
+
+        Backpressure is the absence of service: a pop against an empty
+        (or not-yet-ready) queue and a push against a full one leave
+        ``waiting_on`` set, and the settle fixpoint retries once a
+        matching push/pop frees the queue. Not-ready heads post a
+        ``fifo_tick`` so the time-jump lands on the ready cycle.
+        """
+        progressed = False
+        for cu in self.cus.values():
+            while isinstance(cu.waiting_on, tuple):
+                kind, eidx = cu.waiting_on
+                q = self.fifos[eidx]
+                if kind == "fifo_pop":
+                    if not q.head_ready(self.now):
+                        if q.q:
+                            self._post(q.next_ready_time(), "fifo_tick", eidx)
+                        q.pop_stalls += 1
+                        break
+                    cu.feed(q.pop(self.now), self.now)
+                else:  # fifo_push
+                    if not q.can_push():
+                        q.push_stalls += 1
+                        break
+                    q.push(cu.push_value, self.now)
+                    self._post(self.now + q.latency, "fifo_tick", eidx)
+                    cu.feed(0.0, self.now)  # push ack; value is ignored
+                self._drain_outbox(cu)
+                progressed = True
         return progressed
 
     def _try_issue(self, op_id: str, port: dulib.Port) -> bool:
@@ -664,6 +749,10 @@ class Engine:
         elif kind == "spec_fire":
             self.pending_fires -= 1
             self._fire_gate(payload)
+        elif kind == "fifo_tick":
+            # pure wake-up: a token matured (or a slot freed) at this
+            # cycle; the settle fixpoint does the actual service
+            pass
         else:  # pragma: no cover
             raise ValueError(kind)
 

@@ -218,10 +218,14 @@ class GroupContext:
                 sta_instances=self.sta_instances,
                 final_arrays=self.final_arrays,
             )
+        # FIFO streaming PEs (DESIGN.md §11) run live generator CUs —
+        # their pop/push waits cannot be pre-recorded as a replay
+        # script, so those groups skip the cu_factory fast path
+        streaming = bool(self.comp_nofwd.dae.fifo_edges)
         return simulator.SharedArtifacts(
             nodep_bits=self.nodep_bits,
             rank_table=self.rank_table if mode == "LSQ" else None,
-            cu_factory=self.cu_factory,
+            cu_factory=None if streaming else self.cu_factory,
         )
 
     def oracle_loads_if(self, validate: bool) -> Optional[dict]:

@@ -54,7 +54,7 @@ _SIM_FIELDS = tuple(f.name for f in dataclasses.fields(SimParams))
 # engines only read it through a live SpecPlan.
 _DYN_COMMON = (
     "dram_latency", "burst_timeout", "channel_occupancy", "cu_latency",
-    "max_cycles",
+    "max_cycles", "fifo_depth", "fifo_latency",
 )
 MODE_SIM_FIELDS = {
     "STA": (

@@ -1,11 +1,13 @@
-"""Pure-numpy oracles for the load-dependent-trip kernels.
+"""Pure-numpy oracles for the load-dependent-trip and streaming kernels.
 
 These recompute the final protected-array state of the speculative
 kernels (``repro.core.programs``: ``spmv_ldtrip``, ``bfs_front``,
-``chase_sum``) directly from their inputs — independently of LoopIR —
-so tests can pin ``loopir.interpret`` (and therefore every engine,
-which is differential-tested against the interpreter) to a second,
-hand-written semantics.
+``chase_sum``) and the cross-PE FIFO streaming kernels (``stream_dot``,
+``filter_pipe``, ``stream_join`` — DESIGN.md §11) directly from their
+inputs — independently of LoopIR — so tests can pin
+``loopir.interpret`` (and therefore every engine, which is
+differential-tested against the interpreter) to a second, hand-written
+semantics.
 """
 
 from __future__ import annotations
@@ -46,3 +48,35 @@ def chase_sum_ref(nxt, w, n):
         out[i] = w[p] + p
         cur = p
     return out
+
+
+def stream_dot_ref(a, bv, out0, nb, k):
+    """out[b] = out0[b] + sum_j a[b*k+j] * bv[b*k+j] (streamed partial
+    sum folded into the writer leaf's read-modify-write)."""
+    out = np.array(out0, dtype=np.float64, copy=True)
+    for b in range(nb):
+        ps = 0.0
+        for j in range(k):
+            ps = ps + a[b * k + j] * bv[b * k + j]
+        out[b] = out[b] + ps
+    return out
+
+
+def filter_pipe_ref(x, y0):
+    """y[e] = tanh(x[e]) * 0.5 + 1.0 where tanh(x[e]) > 0, else y0[e]
+    (the streamed token decides the guarded store's valid bit)."""
+    y = np.array(y0, dtype=np.float64, copy=True)
+    for e in range(len(x)):
+        v = float(np.tanh(x[e]))
+        if v > 0.0:
+            y[e] = v * 0.5 + 1.0
+    return y
+
+
+def stream_join_ref(u, w, z0):
+    """z[t] = z0[t] + (u[t]*2 + (w[t]+1)) — two producer streams joined
+    by a memory-less PE, result streamed to the writer."""
+    z = np.array(z0, dtype=np.float64, copy=True)
+    for t in range(len(u)):
+        z[t] = z[t] + (u[t] * 2.0 + (w[t] + 1.0))
+    return z

@@ -32,6 +32,14 @@ past the image; pad steps are no-ops (see ``kernel.py``).
 paper's non-fused baseline on identical hardware (a single bucket-8
 segment of ``n_requests`` steps) — and is what
 ``benchmarks/bench_pallas.py`` compares wave execution against.
+
+Cross-PE FIFO edges (DESIGN.md §11) need no support here: the plan
+encodes each edge as circular pseudo-memory slots inside ``mem_size``
+(zero-init in ``flat_image``, absent from ``array_order``), so pushes
+and pops flow through the ordinary scatter/gather path — a popped
+token is literally a gather from the slot its push scattered to, and
+the resolve phase's request-exact checks pin the whole queue protocol
+against the oracle.
 """
 
 from __future__ import annotations

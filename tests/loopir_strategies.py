@@ -382,6 +382,85 @@ def random_loadfree_cu_program(rng, max_depth: int = 2):
     return prog, arrays, params
 
 
+def random_stream_program(rng, max_stages: int = 3):
+    """Random cross-PE FIFO streaming programs (DESIGN.md §11): a chain
+    of 1..max_stages producer stages — sibling depth-1 leaves under one
+    outer loop, each computing a scalar local (init at the shared depth,
+    sometimes chained off the previous stage's streamed local, sometimes
+    zero-trip so the init value becomes the token) — feeding a final
+    read-modify-write consumer leaf whose store value (and sometimes §6
+    guard) references one or more streamed locals directly. Every
+    program passes ``fifo.analyze_program`` by construction: edges are
+    forward, rates match (all leaves sit directly under the shared
+    loop), and stores read streamed locals only directly."""
+    n_stages = int(rng.integers(1, max_stages + 1))
+    n_out = int(rng.integers(4, 13))
+    arrays = {
+        "data": rng.standard_normal(_N_IDX),
+        "out": rng.standard_normal(n_out),
+    }
+    outer_trip = int(rng.integers(1, 5))
+
+    def leaf_trip():
+        kind = _choice(rng, ["one", "one", "small", "zero", "neg"])
+        if kind == "one":
+            return ir.Const(1)
+        if kind == "small":
+            return ir.Const(int(rng.integers(1, 4)))
+        if kind == "zero":
+            return ir.Const(0)
+        # zero-trip for every outer iteration past the first
+        return ir.Bin("-", ir.Const(1), ir.Var("t"))
+
+    body = []
+    op_n = [0]
+    for s in range(n_stages):
+        local = f"x{s}"
+        body.append(ir.SetLocal(local, ir.Const(float(rng.integers(-2, 3)))))
+        stage = []
+        val = ir.Const(float(rng.integers(1, 3)))
+        if rng.integers(0, 2):
+            op_n[0] += 1
+            lid = f"ld{op_n[0]}"
+            stage.append(ir.Load(
+                lid, "data",
+                ir.Bin("%", ir.Var("t") * 3 + ir.Var(f"s{s}") + s,
+                       ir.Const(_N_IDX)),
+            ))
+            val = ir.LoadVal(lid) * 0.5 + val
+        if s > 0 and rng.integers(0, 2):
+            # chain: this stage consumes the previous stage's stream
+            val = val + ir.Local(f"x{s - 1}")
+        if rng.integers(0, 2):
+            val = val + ir.Local(local)  # accumulate across the leaf trip
+        stage.append(ir.SetLocal(local, val))
+        body.append(ir.Loop(f"s{s}", leaf_trip(), tuple(stage)))
+
+    # final consumer: RMW on "out", value (and sometimes guard) over a
+    # non-empty subset of the streamed locals
+    used = sorted(
+        set([int(rng.integers(0, n_stages))])
+        | {s for s in range(n_stages) if rng.integers(0, 3) == 0}
+    )
+    sval = ir.LoadVal("ld_out") * 0.5
+    for s in used:
+        sval = sval + ir.Local(f"x{s}")
+    guard = None
+    if rng.integers(0, 2):
+        guard = ir.Bin(">", ir.Local(f"x{used[-1]}"),
+                       ir.Const(float(rng.integers(-1, 2))))
+    addr = ir.Bin("%", ir.Var("t") * 2 + ir.Var("c"), ir.Const(n_out))
+    body.append(ir.Loop("c", ir.Const(1), (
+        ir.Load("ld_out", "out", addr),
+        ir.Store("st_out", "out", addr, sval, guard=guard),
+    )))
+    prog = ir.Program(
+        "streamfuzz",
+        loops=(ir.Loop("t", ir.Const(outer_trip), tuple(body)),),
+    )
+    return prog, arrays, {}
+
+
 if HAVE_HYPOTHESIS:
     # Example budgets come from profiles, NOT per-test @settings — a
     # pinned max_examples would silently override the nightly profile.
@@ -415,4 +494,11 @@ if HAVE_HYPOTHESIS:
         seed = draw(st.integers(0, 2**31))
         return random_wave_program(
             np.random.default_rng(seed), max_depth=max_depth
+        )
+
+    @st.composite
+    def stream_programs(draw, max_stages: int = 3):
+        seed = draw(st.integers(0, 2**31))
+        return random_stream_program(
+            np.random.default_rng(seed), max_stages=max_stages
         )
