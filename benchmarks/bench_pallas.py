@@ -1,5 +1,5 @@
 """Pallas wave-backend benchmark: fused wave-parallel execution of every
-Table-1 kernel (plus the three speculative kernels) vs the sequential
+Table-1 kernel (plus the four speculative kernels) vs the sequential
 per-request path on the same hardware route.
 
 Produces the evidence file committed as ``BENCH_PALLAS.json``:
@@ -56,6 +56,7 @@ SMOKE_SCALES = {
     "bnn": 16, "pagerank": 24, "fft": 64, "matpower": 16,
     "hist+add": 256, "tanh+spmv": 96,
     "spmv_ldtrip": 32, "bfs_front": 64, "chase_sum": 48,
+    "strided_scan": 48,
 }
 
 # wave-parallelism bar asserted on the full run: every Table-1 kernel

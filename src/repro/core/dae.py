@@ -21,9 +21,10 @@ paper resolves this with speculation from prior work [62]. Under
 ``decouple(speculation="off")`` (the default) such programs are
 rejected with a diagnostic naming the offending op/loop/local; under
 ``speculation="auto"`` the PE is instead marked speculative
-(``DAEResult.spec``) and the AGU runs ahead with a last-value
-predictor, squashing mis-speculated epochs through the §6 valid-bit
-machinery (``core/speculate.py``, DESIGN.md §10).
+(``DAEResult.spec``) and the AGU runs ahead with a value predictor
+(``predictor=`` selects from the zoo in ``PREDICTORS``), squashing
+mis-speculated epochs through the §6 valid-bit machinery
+(``core/speculate.py``, DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -50,6 +51,15 @@ class CUContractError(RuntimeError):
 
 SPECULATION_MODES = ("off", "auto")
 
+# The speculative-AGU predictor zoo (core/speculate.py, DESIGN.md §10):
+# value predictors a speculative AGU port can run ahead on. Defined here
+# (not in speculate.py) so every layer that threads the knob —
+# ``decouple``, ``simulator.Compiled``, ``executor.build_wave_plan``,
+# ``dse.spec`` — validates against one tuple without import cycles.
+# ``"auto"`` runs a per-port tournament and follows the best-scoring
+# component predictor.
+PREDICTORS = ("last", "stride", "context", "auto")
+
 
 @dataclasses.dataclass(frozen=True)
 class SpecInfo:
@@ -58,8 +68,9 @@ class SpecInfo:
     Produced by ``decouple(speculation="auto")`` instead of raising
     ``LossOfDecoupling``: ``loads`` are the protected load ops whose
     values the AGU's address/trip closure consumes (each becomes a
-    last-value-predicted port of the speculative AGU, DESIGN.md §10);
-    ``reasons`` are the exact diagnostics ``speculation="off"`` raises.
+    value-predicted port of the speculative AGU — predictor zoo,
+    DESIGN.md §10); ``reasons`` are the exact diagnostics
+    ``speculation="off"`` raises.
     """
 
     pe_id: int
@@ -154,6 +165,10 @@ class DAEResult:
     # PE id -> SpecInfo for PEs that need the speculative AGU (only
     # populated under decouple(speculation="auto"); empty otherwise)
     spec: dict[int, SpecInfo] = dataclasses.field(default_factory=dict)
+    # the predictor knob the speculative AGU traces under (PREDICTORS);
+    # carried for diagnostics — prediction itself is trace-time-only
+    # (core/speculate.py), so decoupling is predictor-independent
+    predictor: str = "auto"
 
     def shared_depth(self, op_a: str, op_b: str, program: ir.Program) -> int:
         """Number of common loops of the two ops' original nests."""
@@ -168,17 +183,25 @@ class DAEResult:
         return k
 
 
-def decouple(program: ir.Program, speculation: str = "off") -> DAEResult:
+def decouple(
+    program: ir.Program, speculation: str = "off", predictor: str = "auto"
+) -> DAEResult:
     """Run the decoupling pass over the program's loop forest.
 
     ``speculation`` selects the loss-of-decoupling policy: ``"off"``
     raises ``LossOfDecoupling`` when an AGU's address/trip closure
     touches a protected load value, ``"auto"`` marks the PE speculative
     instead (``DAEResult.spec``) so the trace front-end can build the
-    speculative AGU (``core/speculate.py``).
+    speculative AGU (``core/speculate.py``). ``predictor`` names the
+    value predictor that AGU runs ahead on (``PREDICTORS``); it cannot
+    change *which* PEs are marked — only how their trace predicts — and
+    is validated and carried here so every backend shares one knob.
     """
     assert speculation in SPECULATION_MODES, (
         f"unknown speculation mode {speculation!r}"
+    )
+    assert predictor in PREDICTORS, (
+        f"unknown predictor {predictor!r} (choose from {PREDICTORS})"
     )
     pes: list[PE] = []
     op_to_pe: dict[str, int] = {}
@@ -276,7 +299,10 @@ def decouple(program: ir.Program, speculation: str = "off") -> DAEResult:
         if si is not None:
             spec[pe.id] = si
 
-    return DAEResult(pes=pes, op_to_pe=op_to_pe, fifo_edges=fifo_edges, spec=spec)
+    return DAEResult(
+        pes=pes, op_to_pe=op_to_pe, fifo_edges=fifo_edges, spec=spec,
+        predictor=predictor,
+    )
 
 
 class CU:

@@ -292,6 +292,8 @@ class EventEngine:
         self.result.cycles = self.now
         self.result.arrays = self.mem
         self.result.fifo_stats = [q.stats() for q in self.fifos.values()]
+        if self.spec is not None:
+            self.result.spec_stats = self.spec.stats()
         return self.result
 
     def _all_done(self):
@@ -773,16 +775,21 @@ class EventEngine:
             self.ready_loads[port.op_id].extend(popped.tolist())
             self.deliver_dirty.add(port.pe_id)
             if self.spec is not None:
-                # mispredicted value delivered: squash completes (and
-                # the corrected epoch opens) squash_latency later
+                # gated value delivered: squash gates fire
+                # squash_latency later, wait gates at delivery
+                # (SpecPlan.fire_delay)
                 rv = self.spec.resolve_of.get(port.op_id)
                 if rv is not None:
                     sel = popped[popped < len(rv)]
                     for gid in rv[sel]:
                         if gid >= 0:
+                            gid = int(gid)
                             self._post(
-                                self.now + self.p.squash_latency,
-                                "spec_fire", int(gid),
+                                self.now
+                                + self.spec.fire_delay(
+                                    gid, self.p.squash_latency
+                                ),
+                                "spec_fire", gid,
                             )
         if self.sequential:
             r = self.inst_rank[port.op_id][popped]

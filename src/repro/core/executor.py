@@ -185,6 +185,7 @@ def _trace_stream(
     params: dict[str, int],
     trace_mode: str,
     oracle_loads=None,
+    predictor: str = "auto",
 ) -> tuple[list[str], list[int], list[bool]]:
     """Program-order (op id, address, is_store) stream from AGU traces.
 
@@ -199,7 +200,7 @@ def _trace_stream(
 
     traces = schedlib.trace_program(
         program, dae, arrays, params, mode=trace_mode,
-        oracle_loads=oracle_loads,
+        oracle_loads=oracle_loads, predictor=predictor,
     )
     loop_pos, op_pos = program.static_positions()
     op_path = {op.id: path for op, path in program.mem_ops()}
@@ -239,6 +240,7 @@ def build_wave_plan(
     params: Optional[dict[str, int]] = None,
     trace_mode: str = "auto",
     speculation: str = "off",
+    predictor: str = "auto",
     batch_waves: bool = True,
     fifo_depth: int = 4,
 ) -> WavePlan:
@@ -256,6 +258,9 @@ def build_wave_plan(
     (load-dependent trips/addresses, DESIGN.md §10): the wave partition
     works off the *true* post-squash request stream — phantom squash
     traffic is a DU-timing artifact and has no wave-executor analogue.
+    ``predictor`` (``dae.PREDICTORS``) is accepted for API uniformity
+    with ``simulate()``: the post-squash streams are identical under
+    every predictor, so the emitted plan does not depend on it.
 
     ``batch_waves`` (default on) coarsens the wave partition into
     batched steps (WavePlan contract 5); ``False`` keeps one step per
@@ -276,7 +281,7 @@ def build_wave_plan(
     from repro.core import dae as daelib
     from repro.core import fifo as fifolib
 
-    dae = daelib.decouple(program, speculation=speculation)
+    dae = daelib.decouple(program, speculation=speculation, predictor=predictor)
     fifo_spec = None
     if dae.fifo_edges:
         if dae.spec:
@@ -392,6 +397,7 @@ def build_wave_plan(
         req_op_l, req_addr_l, req_store_l = _trace_stream(
             program, dae, arrays, params, trace_mode,
             oracle_loads=load_streams if dae.spec else None,
+            predictor=predictor,
         )
         n_oracle = sum(len(v) for v in per_op_vv.values())
         assert n_oracle == len(req_op_l), (
@@ -891,6 +897,7 @@ def execute(
     params: Optional[dict[str, int]] = None,
     trace_mode: str = "auto",
     speculation: str = "off",
+    predictor: str = "auto",
     backend: str = "numpy",
     batch_waves: bool = True,
     fifo_depth: int = 4,
@@ -914,6 +921,9 @@ def execute(
     (load-dependent trips/addresses, DESIGN.md §10): the wave partition
     works off the *true* post-squash request stream — phantom squash
     traffic is a DU-timing artifact and has no wave-executor analogue.
+    ``predictor`` (``dae.PREDICTORS``) is accepted for API uniformity:
+    final arrays and the wave partition are identical under every
+    predictor (tests/test_speculation.py pins this).
 
     ``batch_waves`` (default on) lets both backends execute batched
     conflict-free wave runs as single steps (WavePlan contract 5);
@@ -926,8 +936,8 @@ def execute(
     """
     plan = build_wave_plan(
         program, arrays, params, trace_mode=trace_mode,
-        speculation=speculation, batch_waves=batch_waves,
-        fifo_depth=fifo_depth,
+        speculation=speculation, predictor=predictor,
+        batch_waves=batch_waves, fifo_depth=fifo_depth,
     )
     if backend == "numpy":
         out = _replay_numpy(plan, arrays)

@@ -615,23 +615,33 @@ def bfs_front(scale: int):
     return prog, arrays, {"levels": levels, "levels1": levels + 1}
 
 
-@_register("chase_sum", "O(n)", 256, speculative=True)
+@_register("chase_sum", "O(laps * n)", 256, speculative=True)
 def chase_sum(scale: int):
-    """Linked-list pointer chase: the next address round-trips through
-    an AGU local fed by the loaded value — the worst case for the
-    last-value predictor (every occurrence mispredicts), degrading to
-    delivery-gated sequential issue. Correctness showcase, not a
-    speedup one (DESIGN.md §10)."""
+    """Repeated linked-list pointer chase (the lmbench latency idiom):
+    ``nxt`` is one n-node cycle, walked ``laps`` times from node 0. The
+    next address round-trips through an AGU local fed by the loaded
+    value — the worst case for the last-value predictor (every
+    occurrence mispredicts, delivery-gated sequential issue), but the
+    context-table predictor learns node -> successor on the first lap
+    and runs ahead on the rest; confidence gating keeps lap 1 cheap
+    (wait gates instead of squash storms). The kernel the predictor
+    zoo turns from a documented non-win into a speedup (DESIGN.md
+    §10, BENCH_SPEC.json)."""
     n = scale
+    laps = 3
+    steps = laps * n
     rng = np.random.default_rng(11)
-    nxt = rng.permutation(n).astype(np.int64)
+    # a single n-cycle: following nxt from any node visits every node
+    order = rng.permutation(n).astype(np.int64)
+    nxt = np.empty(n, dtype=np.int64)
+    nxt[order] = np.roll(order, -1)
 
     prog = Program(
         name="chase_sum",
         loops=(
             Loop("o", Const(1), (
                 SetLocal("cur", Const(0)),
-                Loop("i", Param("n", 0, n), (
+                Loop("i", Param("steps", 0, steps), (
                     Load("ld_nxt", "nxt", Local("cur")),
                     SetLocal("cur", LoadVal("ld_nxt")),
                     Store(
@@ -641,10 +651,51 @@ def chase_sum(scale: int):
                 )),
             )),
         ),
-        params=("n",),
+        params=("steps",),
     )
     arrays = {
         "nxt": nxt.astype(np.float64),
+        "out": np.zeros(steps, dtype=np.float64),
+        "w": rng.standard_normal(n),
+    }
+    return prog, arrays, {"steps": steps}
+
+
+@_register("strided_scan", "O(n)", 256, speculative=True)
+def strided_scan(scale: int):
+    """AGU-local induction through memory: the next pointer is loaded
+    from ``ptr[cur]`` where the stored values form an arithmetic
+    sequence (``cur + stride``) — a software-pipelined sparse scan
+    whose index increment lives in memory. Loss of decoupling like
+    ``chase_sum``, but the value stream is affine: the stride predictor
+    locks on after two occurrences and runs the whole scan ahead, while
+    last-value mispredicts every occurrence (DESIGN.md §10)."""
+    n = scale
+    stride = 3
+    rng = np.random.default_rng(13)
+    # ptr[k] = k + stride: following ptr from 0 yields stride, 2*stride,
+    # ... — an arithmetic value sequence only visible through memory
+    ptr = (np.arange(n * stride, dtype=np.int64) + stride)
+
+    prog = Program(
+        name="strided_scan",
+        loops=(
+            Loop("o", Const(1), (
+                SetLocal("cur", Const(0)),
+                Loop("i", Param("n", 0, n), (
+                    Load("ld_p", "ptr", Local("cur")),
+                    SetLocal("cur", LoadVal("ld_p")),
+                    Store(
+                        "st_o", "out", V("i"),
+                        R("w", V("i")) + LoadVal("ld_p"),
+                    ),
+                )),
+            )),
+        ),
+        params=("n",),
+    )
+    arrays = {
+        "ptr": ptr.astype(np.float64),
         "out": np.zeros(n, dtype=np.float64),
         "w": rng.standard_normal(n),
     }

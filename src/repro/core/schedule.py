@@ -147,6 +147,8 @@ def trace_program(
     report: Optional[dict] = None,
     spec_out: Optional[list] = None,
     oracle_loads: Optional[dict] = None,
+    predictor: str = "auto",
+    spec_runahead: Optional[int] = None,
 ) -> dict[str, OpTrace]:
     """Generate the AGU request streams of every memory op in every PE.
 
@@ -166,6 +168,10 @@ def trace_program(
     hooked ``loopir.interpret`` — validation, the DSE planner, the wave
     executor — pass theirs to avoid a second sequential walk); when
     absent and a PE speculates, one hooked run happens here.
+    ``predictor`` (``dae.PREDICTORS``) and ``spec_runahead``
+    (``SimParams.spec_runahead``; ``None`` = the speculate default)
+    parameterize the built ``SpecPlan`` — they move gates and phantom
+    traffic only, never the request streams.
     """
     assert mode in TRACE_MODES, f"unknown trace mode {mode!r}"
     params = params or {}
@@ -183,7 +189,18 @@ def trace_program(
             from repro.core import speculate
 
             if spec_plan is None:
-                spec_plan = speculate.SpecPlan()
+                assert predictor in daelib.PREDICTORS, (
+                    f"unknown predictor {predictor!r} "
+                    f"(choose from {daelib.PREDICTORS})"
+                )
+                spec_plan = speculate.SpecPlan(
+                    predictor=predictor,
+                    runahead=(
+                        speculate.DEFAULT_RUNAHEAD
+                        if spec_runahead is None
+                        else int(spec_runahead)
+                    ),
+                )
                 if oracle_loads is None:
                     oracle_loads = speculate.oracle_load_streams(
                         program, arrays, params

@@ -65,6 +65,10 @@ class SimParams:
     # load's value delivery to the squash completing and the corrected
     # epoch becoming issuable
     squash_latency: int = 4
+    # speculative run-ahead window: phantom requests per (epoch, op) a
+    # mispredicting AGU gets in flight before the truth squashes it — a
+    # DSE axis (dse.SweepSpec); cap hits surface in SimResult.spec_stats
+    spec_runahead: int = 16
     # static II for loops with potential memory dependencies: a static
     # pipeline cannot disambiguate, so the loop is scheduled at the DRAM
     # round-trip dependence distance (load -> compute -> store visible).
@@ -92,6 +96,10 @@ class SimResult:
     and ``squashed`` the speculative AGU's squashed phantom request
     count (0 unless the program runs with ``speculation="auto"``,
     DESIGN.md §10; phantom loads are included in the DRAM counters).
+    ``spec_stats`` is ``speculate.SpecPlan.stats()`` — predictor,
+    run-ahead window, per-port and per-predictor outcomes, wait/squash
+    gate counts, and run-ahead cap visibility; empty for
+    non-speculative runs.
     """
 
     cycles: int
@@ -104,6 +112,8 @@ class SimResult:
     # per-edge FIFO accounting (core/fifo.py stats dicts) for streaming
     # programs; empty for everything else
     fifo_stats: list = dataclasses.field(default_factory=list)
+    # speculate.SpecPlan.stats() for speculative runs; {} otherwise
+    spec_stats: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -152,7 +162,9 @@ class Compiled:
     ``speculation`` selects the loss-of-decoupling policy (DESIGN.md
     §10): ``"off"`` rejects AGUs that depend on protected loads,
     ``"auto"`` marks them speculative so the trace front-end builds a
-    run-ahead AGU with epoch squash.
+    run-ahead AGU with epoch squash. ``predictor`` picks the value
+    predictor of that AGU (``dae.PREDICTORS``; dead code when nothing
+    speculates).
     """
 
     def __init__(
@@ -161,11 +173,15 @@ class Compiled:
         forwarding: bool,
         trace_mode: str = "auto",
         speculation: str = "off",
+        predictor: str = "auto",
     ):
         self.program = program
         self.trace_mode = trace_mode
         self.speculation = speculation
-        self.dae = daelib.decouple(program, speculation=speculation)
+        self.predictor = predictor
+        self.dae = daelib.decouple(
+            program, speculation=speculation, predictor=predictor
+        )
         # cross-PE scalar FIFO edges: the static token-protocol gate
         # (core/fifo.py, DESIGN.md §11). Programs it admits run with
         # bounded backpressured queues in both engines; programs it
@@ -493,6 +509,8 @@ class Engine:
         self.result.cycles = self.now
         self.result.arrays = self.mem
         self.result.fifo_stats = [q.stats() for q in self.fifos.values()]
+        if self.spec is not None:
+            self.result.spec_stats = self.spec.stats()
         return self.result
 
     def _all_done(self):
@@ -813,19 +831,22 @@ class Engine:
             if not port.is_store:
                 self.ready_loads.setdefault(port.op_id, []).append(e)
                 if self.spec is not None:
-                    # delivery of a mispredicted value: squash completes
-                    # (and the corrected epoch opens) squash_latency later
+                    # delivery of a gated value: a squash gate fires
+                    # squash_latency later, a wait gate at delivery
+                    # (SpecPlan.fire_delay)
                     rv = self.spec.resolve_of.get(port.op_id)
                     if (
                         rv is not None
                         and e.req_idx < len(rv)
                         and rv[e.req_idx] >= 0
                     ):
+                        gid = int(rv[e.req_idx])
                         self.pending_fires += 1
                         self._post(
-                            self.now + self.p.squash_latency,
+                            self.now
+                            + self.spec.fire_delay(gid, self.p.squash_latency),
                             "spec_fire",
-                            int(rv[e.req_idx]),
+                            gid,
                         )
 
     def _deliver(self, port: dulib.Port) -> bool:
@@ -873,6 +894,7 @@ def simulate(
     engine: str = "event",
     trace_mode: str = "auto",
     speculation: str = "off",
+    predictor: str = "auto",
 ) -> SimResult:
     """Simulate ``program`` under one of the four evaluated systems.
 
@@ -898,10 +920,14 @@ def simulate(
     ``speculation`` selects the loss-of-decoupling policy (DESIGN.md
     §10): ``"off"`` (default) raises ``dae.LossOfDecoupling`` when an
     AGU depends on a protected load value; ``"auto"`` builds a
-    speculative run-ahead AGU instead — last-value prediction, epoch
+    speculative run-ahead AGU instead — value prediction, epoch
     tagging, rollback-free squash through the §6 valid-bit path — and
-    opens load-dependent-trip/address kernels. Final arrays stay
-    bit-identical to the sequential oracle either way.
+    opens load-dependent-trip/address kernels. ``predictor``
+    (``dae.PREDICTORS``: ``"last"`` | ``"stride"`` | ``"context"`` |
+    ``"auto"``) picks the speculative AGU's value predictor; the
+    run-ahead window is ``SimParams.spec_runahead``. Final arrays stay
+    bit-identical to the sequential oracle under every setting — the
+    predictor only moves epoch gates and phantom traffic.
     """
     assert mode in ("STA", "LSQ", "FUS1", "FUS2"), f"unknown mode {mode!r}"
     assert engine in ("cycle", "event"), f"unknown engine {engine!r}"
@@ -910,7 +936,7 @@ def simulate(
     p = sim or SimParams()
     comp = Compiled(
         program, forwarding=(mode == "FUS2"), trace_mode=trace_mode,
-        speculation=speculation,
+        speculation=speculation, predictor=predictor,
     )
     spec_out: list = []
     oracle_loads: Optional[dict[str, list[float]]] = None
@@ -923,6 +949,7 @@ def simulate(
     traces = schedlib.trace_program(
         program, comp.dae, arrays, params, mode=trace_mode,
         spec_out=spec_out, oracle_loads=oracle_loads,
+        predictor=predictor, spec_runahead=p.spec_runahead,
     )
 
     if validate and mode != "STA" and oracle_loads is None:

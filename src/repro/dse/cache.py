@@ -69,12 +69,19 @@ def result_cache_key(
     sim: tuple,
     version: Optional[str] = None,
     speculation: str = "-",
+    predictor: str = "-",
 ) -> str:
     """Content hash naming one cache entry (hex sha256).
 
     ``speculation`` is the point's *spec class* (``SweepPoint.
     spec_class``): ``"-"`` for kernels the knob cannot affect — so
     ``off``/``auto`` share one entry there — else the knob value.
+    ``predictor`` is likewise the *predictor class*
+    (``SweepPoint.predictor_class``): ``"-"`` unless the point
+    actually speculates, else the predictor knob — distinct predictors
+    produce distinct gate schedules, hence distinct results. The
+    resolved ``spec_runahead`` travels in ``sim`` (``relevant_sim``
+    keeps it only for speculating points).
     """
     h = hashlib.sha256()
     h.update(f"format={CACHE_FORMAT}\x00".encode())
@@ -86,6 +93,7 @@ def result_cache_key(
         h.update(a.tobytes())
     h.update(repr(sorted((params or {}).items())).encode())
     h.update(f"\x00{mode}\x00{engine_class}\x00{sim!r}\x00{speculation}".encode())
+    h.update(f"\x00{predictor}".encode())
     return h.hexdigest()
 
 
@@ -124,6 +132,8 @@ class ResultCache:
             dram_requests=meta["dram_requests"],
             forwards=meta["forwards"],
             squashed=meta.get("squashed", 0),
+            fifo_stats=meta.get("fifo_stats", []),
+            spec_stats=meta.get("spec_stats", {}),
         )
 
     def put(self, key: str, result: SimResult) -> None:

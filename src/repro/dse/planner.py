@@ -59,6 +59,13 @@ class Group:
     # whose knob provably cannot change the result share the "off"
     # compile (the fourth result-invariance, dse.spec)
     speculation: str = "off"
+    # the speculative-AGU predictor and run-ahead window the group's
+    # shared SpecPlan is traced under (dse.spec fifth invariance):
+    # distinct values produce distinct gate schedules, so they get
+    # distinct groups; non-speculative (and STA-folded) groups keep the
+    # defaults — their plan is unused
+    predictor: str = "auto"
+    spec_runahead: Optional[int] = None
 
     @property
     def n_points(self) -> int:
@@ -66,10 +73,18 @@ class Group:
 
 
 def plan(points: list[SweepPoint]) -> list[Group]:
-    """Group points by (kernel, scale, spec class), dedup by result key."""
+    """Group points by (kernel, scale, spec/predictor/run-ahead class),
+    dedup by result key. The predictor and run-ahead classes fold to
+    ``"-"`` for points that never consult a SpecPlan (dse.spec), so
+    e.g. all STA points of a speculative kernel share one group — and
+    one run — across every predictor value."""
     groups: dict[tuple, dict[tuple, UniqueRun]] = {}
     for i, p in enumerate(points):
-        g = groups.setdefault((p.kernel, p.scale, p.spec_class), {})
+        g = groups.setdefault(
+            (p.kernel, p.scale, p.spec_class, p.predictor_class,
+             p.runahead_class),
+            {},
+        )
         run = g.get(p.result_key)
         if run is None:
             g[p.result_key] = UniqueRun(key=p.result_key, rep=p, point_indices=[i])
@@ -79,8 +94,12 @@ def plan(points: list[SweepPoint]) -> list[Group]:
         Group(
             kernel=k, scale=s, runs=list(g.values()),
             speculation="auto" if sc == "auto" else "off",
+            predictor=pc if pc != "-" else "auto",
+            spec_runahead=rc if rc != "-" else None,
         )
-        for (k, s, sc), g in sorted(groups.items())
+        for (k, s, sc, pc, rc), g in sorted(
+            groups.items(), key=lambda kv: tuple(map(str, kv[0]))
+        )
     ]
 
 
@@ -100,13 +119,15 @@ class GroupContext:
     @cached_property
     def comp_fwd(self) -> simulator.Compiled:
         return simulator.Compiled(
-            self.program, forwarding=True, speculation=self.group.speculation
+            self.program, forwarding=True, speculation=self.group.speculation,
+            predictor=self.group.predictor,
         )
 
     @cached_property
     def comp_nofwd(self) -> simulator.Compiled:
         return simulator.Compiled(
-            self.program, forwarding=False, speculation=self.group.speculation
+            self.program, forwarding=False, speculation=self.group.speculation,
+            predictor=self.group.predictor,
         )
 
     def comp(self, mode: str) -> simulator.Compiled:
@@ -124,6 +145,8 @@ class GroupContext:
             oracle_loads=(
                 self.oracle_loads if self.comp_nofwd.dae.spec else None
             ),
+            predictor=self.group.predictor,
+            spec_runahead=self.group.spec_runahead,
         )
         return traces, (spec_out[0] if spec_out else None)
 

@@ -76,9 +76,11 @@ class SweepResult:
                 "engine": p.engine, "trace_mode": p.trace_mode,
                 "sizing": p.sizing, "sim": dict(p.sim),
                 "speculation": p.speculation,
+                "predictor": p.predictor,
                 "cycles": r.cycles, "dram_bursts": r.dram_bursts,
                 "dram_requests": r.dram_requests, "forwards": r.forwards,
                 "squashed": r.squashed,
+                "spec_stats": r.spec_stats,
                 "cached": pr.cached, "run_wall_s": pr.run_wall_s,
             })
         return out
@@ -227,7 +229,7 @@ def _run_group_task(args):
             key = cachelib.result_cache_key(
                 ctx.program, ctx.arrays, ctx.params, rep.mode,
                 "-" if rep.mode == "STA" else rep.engine, rep.relevant_sim,
-                speculation=rep.spec_class,
+                speculation=rep.spec_class, predictor=rep.predictor_class,
             )
             # validate=True means "actually check this configuration":
             # cached results carry no validation, so only write-through

@@ -27,7 +27,11 @@ Two distinct notions of identity matter downstream:
       4. the ``speculation`` knob folds to ``"-"`` for kernels the
          decoupling pass never marks speculative (``spec_class``) —
          ``"off"`` and ``"auto"`` provably share results there, and
-         ``squash_latency`` overrides are projected out with it.
+         ``squash_latency`` overrides are projected out with it,
+      5. the ``predictor`` knob (and ``spec_runahead`` overrides) fold
+         the same way (``predictor_class``/``runahead_class``): they
+         only reach a result through a live ``SpecPlan``, so they are
+         dead code — and projected out — unless the point speculates.
 """
 
 from __future__ import annotations
@@ -36,6 +40,7 @@ import dataclasses
 from typing import Optional, Sequence, Union
 
 from repro.core import programs
+from repro.core.dae import PREDICTORS
 from repro.core.simulator import SimParams
 
 MODES = ("STA", "LSQ", "FUS1", "FUS2")
@@ -49,21 +54,23 @@ _SIM_FIELDS = tuple(f.name for f in dataclasses.fields(SimParams))
 # simulator._simulate_sta and the two engines; the batch-vs-single
 # differential in tests/test_dse.py would catch any drift). The result
 # identity of a point projects its overrides onto this set.
-# ``squash_latency`` is additionally projected out unless the point
-# actually speculates (``SweepPoint.spec_class == "auto"``) — the
-# engines only read it through a live SpecPlan.
+# ``squash_latency`` and ``spec_runahead`` are additionally projected
+# out unless the point actually speculates
+# (``SweepPoint.spec_class == "auto"``) — the engines only read them
+# through a live SpecPlan.
 _DYN_COMMON = (
     "dram_latency", "burst_timeout", "channel_occupancy", "cu_latency",
     "max_cycles", "fifo_depth", "fifo_latency",
 )
+_SPEC_FIELDS = ("squash_latency", "spec_runahead")
 MODE_SIM_FIELDS = {
     "STA": (
         "dram_latency", "burst_size", "channel_occupancy",
         "pipeline_fill", "sta_mem_dep_ii",
     ),
-    "LSQ": _DYN_COMMON + ("squash_latency",),  # burst 1; never forwards
-    "FUS1": _DYN_COMMON + ("burst_size", "squash_latency"),
-    "FUS2": _DYN_COMMON + ("burst_size", "forward_latency", "squash_latency"),
+    "LSQ": _DYN_COMMON + _SPEC_FIELDS,  # burst 1; never forwards
+    "FUS1": _DYN_COMMON + ("burst_size",) + _SPEC_FIELDS,
+    "FUS2": _DYN_COMMON + ("burst_size", "forward_latency") + _SPEC_FIELDS,
 }
 
 
@@ -98,6 +105,7 @@ class SweepPoint:
     sim: tuple = ()  # canonical ((field, value), ...) SimParams overrides
     sizing: str = "base"  # display label for the sim overrides
     speculation: str = "off"  # loss-of-decoupling policy (DESIGN.md §10)
+    predictor: str = "auto"  # speculative-AGU value predictor (dae.PREDICTORS)
 
     def __post_init__(self):
         assert self.kernel in programs.REGISTRY, f"unknown kernel {self.kernel!r}"
@@ -109,6 +117,9 @@ class SweepPoint:
         assert self.speculation in SPECULATIONS, (
             f"unknown speculation mode {self.speculation!r}"
         )
+        assert self.predictor in PREDICTORS, (
+            f"unknown predictor {self.predictor!r}"
+        )
         object.__setattr__(self, "sim", _canon_sim(self.sim))
 
     def sim_params(self) -> SimParams:
@@ -118,7 +129,7 @@ class SweepPoint:
     def point_id(self) -> tuple:
         return (
             self.kernel, self.scale, self.mode, self.engine,
-            self.trace_mode, self.sim, self.speculation,
+            self.trace_mode, self.sim, self.speculation, self.predictor,
         )
 
     @property
@@ -132,14 +143,36 @@ class SweepPoint:
         return self.speculation
 
     @property
+    def predictor_class(self) -> str:
+        """Predictor part of the result identity: ``"-"`` unless the
+        point actually speculates (``spec_class == "auto"``) — on
+        everything else the predictor knob is dead code and every value
+        folds to one result. STA folds too: the analytical model never
+        consults the SpecPlan."""
+        if self.mode == "STA" or self.spec_class != "auto":
+            return "-"
+        return self.predictor
+
+    @property
+    def runahead_class(self) -> Union[str, int]:
+        """Run-ahead-window part of the result identity: ``"-"`` unless
+        the point speculates, else the resolved ``spec_runahead``
+        (override or default) — it only reaches a result through a live
+        ``SpecPlan`` (``"-"`` for STA, as ``predictor_class``)."""
+        if self.mode == "STA" or self.spec_class != "auto":
+            return "-"
+        sim = dict(self.sim)
+        return int(sim.get("spec_runahead", SimParams().spec_runahead))
+
+    @property
     def relevant_sim(self) -> tuple:
         """``sim`` projected onto the fields this point's mode reads
         (``MODE_SIM_FIELDS``) — the SimParams part of the result
-        identity. ``squash_latency`` only counts when the point
-        actually speculates."""
+        identity. ``squash_latency``/``spec_runahead`` only count when
+        the point actually speculates."""
         fields = MODE_SIM_FIELDS[self.mode]
         if self.spec_class != "auto":
-            fields = tuple(f for f in fields if f != "squash_latency")
+            fields = tuple(f for f in fields if f not in _SPEC_FIELDS)
         return tuple((k, v) for k, v in self.sim if k in fields)
 
     @property
@@ -148,13 +181,14 @@ class SweepPoint:
 
         Excludes ``trace_mode`` entirely, ``engine`` for STA, any
         SimParams override the mode never reads, and folds the
-        speculation knob for non-speculative kernels (``spec_class``) —
-        the result-invariances the planner exploits (DESIGN.md §9.1).
+        speculation and predictor knobs for non-speculative kernels
+        (``spec_class``/``predictor_class``) — the result-invariances
+        the planner exploits (DESIGN.md §9.1).
         """
         engine_class = "-" if self.mode == "STA" else self.engine
         return (
             self.kernel, self.scale, self.mode, engine_class,
-            self.relevant_sim, self.spec_class,
+            self.relevant_sim, self.spec_class, self.predictor_class,
         )
 
 
@@ -182,6 +216,9 @@ class SweepSpec:
     # ("auto",) — an "off" point on such a kernel raises exactly like
     # standalone simulate() would
     speculations: Sequence[str] = ("off",)
+    # speculative-AGU predictor axis (dae.PREDICTORS); folds to one
+    # result for points that never speculate (predictor_class)
+    predictors: Sequence[str] = ("auto",)
     extra: Sequence["SweepSpec"] = ()
 
     def points(self) -> list[SweepPoint]:
@@ -197,16 +234,18 @@ class SweepSpec:
                 for engine in self.engines:
                     for tm in self.trace_modes:
                         for spec_mode in self.speculations:
-                            for label, sim in sizings.items():
-                                p = SweepPoint(
-                                    kernel=k, scale=scale, mode=mode,
-                                    engine=engine, trace_mode=tm,
-                                    sim=_canon_sim(sim), sizing=label,
-                                    speculation=spec_mode,
-                                )
-                                if p.point_id not in seen:
-                                    seen.add(p.point_id)
-                                    out.append(p)
+                            for pred in self.predictors:
+                                for label, sim in sizings.items():
+                                    p = SweepPoint(
+                                        kernel=k, scale=scale, mode=mode,
+                                        engine=engine, trace_mode=tm,
+                                        sim=_canon_sim(sim), sizing=label,
+                                        speculation=spec_mode,
+                                        predictor=pred,
+                                    )
+                                    if p.point_id not in seen:
+                                        seen.add(p.point_id)
+                                        out.append(p)
         for sub in self.extra:
             for p in sub.points():
                 if p.point_id not in seen:

@@ -39,13 +39,26 @@ def bfs_front_ref(off0, front, nodeval, nodes):
     return np.asarray(off0, dtype=np.float64).copy(), visit
 
 
-def chase_sum_ref(nxt, w, n):
-    """out[i] = w[p] + p where p walks the ``nxt`` chain from node 0."""
+def chase_sum_ref(nxt, w, steps):
+    """out[i] = w[p] + p where p walks the ``nxt`` chain from node 0 for
+    ``steps`` steps (``laps`` full traversals of the n-node cycle)."""
+    out = np.zeros(steps, dtype=np.float64)
+    cur = 0
+    for i in range(steps):
+        p = int(nxt[cur])
+        out[i] = w[p] + p
+        cur = p
+    return out
+
+
+def strided_scan_ref(ptr, w, n):
+    """out[i] = w[i] + p where p walks ``ptr`` from 0 (p = ptr[p_prev],
+    an arithmetic sequence stored in memory)."""
     out = np.zeros(n, dtype=np.float64)
     cur = 0
     for i in range(n):
-        p = int(nxt[cur])
-        out[i] = w[p] + p
+        p = int(ptr[cur])
+        out[i] = w[i] + p
         cur = p
     return out
 

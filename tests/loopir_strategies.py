@@ -235,6 +235,93 @@ def random_spec_program(rng, max_rows: int = 6):
     return prog, arrays, {}
 
 
+def random_stride_spec_program(rng, max_n: int = 12):
+    """Random loss-of-decoupling programs whose speculative load value
+    stream is (mostly) *stride-patterned*: an AGU local walks a pointer
+    array whose stored values form an arithmetic sequence — sometimes
+    with injected irregularities (a few perturbed entries) so the
+    stride predictor also mispredicts and recovers. Exercises the
+    stride component of the predictor zoo plus confidence re-enable
+    (DESIGN.md §10). The differential in tests/test_speculation.py runs
+    these under every predictor knob."""
+    n = int(rng.integers(3, max_n + 1))
+    stride = int(rng.integers(1, 4))
+    size = n * stride + 4
+    ptr = np.arange(size, dtype=np.float64) + stride
+    # optionally perturb a few entries on the walked path (still within
+    # bounds): stride mispredicts there and must re-learn
+    if rng.integers(0, 2):
+        for _ in range(int(rng.integers(1, 3))):
+            j = int(rng.integers(0, n)) * stride
+            ptr[j] = float(int(rng.integers(0, size - 1)))
+    arrays = {
+        "ptr": ptr,
+        "out": np.zeros(n, dtype=np.float64),
+        "w": rng.standard_normal(size),
+    }
+    prog = ir.Program("stridefuzz", loops=(
+        ir.Loop("o", ir.Const(1), (
+            ir.SetLocal("cur", ir.Const(0)),
+            ir.Loop("i", ir.Const(n), (
+                ir.Load("ld_p", "ptr",
+                        ir.Bin("%", ir.Local("cur"), ir.Const(size))),
+                ir.SetLocal("cur", ir.LoadVal("ld_p")),
+                ir.Store("st_o", "out", ir.Var("i"),
+                         ir.Read("w", ir.Bin("%", ir.LoadVal("ld_p"),
+                                             ir.Const(size)))
+                         + ir.LoadVal("ld_p")),
+            )),
+        )),
+    ))
+    return prog, arrays, {}
+
+
+def random_context_spec_program(rng, max_n: int = 8):
+    """Random loss-of-decoupling programs whose speculative load value
+    stream is *context-repeating*: a pointer cycle over a small node
+    set, traversed several laps — the value following each value is a
+    function of it, so the context-table predictor locks on after lap 1
+    while last/stride keep missing. Sometimes the chain is re-linked
+    mid-run (a node's successor rewritten before the walk by a producer
+    loop) so the table also goes stale and re-learns. Exercises the
+    context component of the predictor zoo (DESIGN.md §10)."""
+    n = int(rng.integers(2, max_n + 1))
+    laps = int(rng.integers(2, 5))
+    steps = laps * n
+    order = rng.permutation(n).astype(np.int64)
+    nxt = np.empty(n, dtype=np.int64)
+    nxt[order] = np.roll(order, -1)
+    arrays = {
+        "nxt": nxt.astype(np.float64),
+        "out": np.zeros(steps, dtype=np.float64),
+        "w": rng.standard_normal(n),
+    }
+    loops = []
+    if rng.integers(0, 2):
+        # producer rewrites one link before the walk (cross-PE RAW into
+        # the speculative port's array): the walk sees the new chain
+        j = int(rng.integers(0, n))
+        arrays["fix"] = np.array([float(int(rng.integers(0, n)))])
+        loops.append(ir.Loop("p", ir.Const(1), (
+            ir.Store("st_fix", "nxt", ir.Var("p") + j,
+                     ir.Read("fix", ir.Var("p"))),
+        )))
+    loops.append(ir.Loop("o", ir.Const(1), (
+        ir.SetLocal("cur", ir.Const(0)),
+        ir.Loop("i", ir.Const(steps), (
+            ir.Load("ld_nxt", "nxt",
+                    ir.Bin("%", ir.Local("cur"), ir.Const(n))),
+            ir.SetLocal("cur", ir.LoadVal("ld_nxt")),
+            ir.Store("st_o", "out", ir.Var("i"),
+                     ir.Read("w", ir.Bin("%", ir.LoadVal("ld_nxt"),
+                                         ir.Const(n)))
+                     + ir.LoadVal("ld_nxt")),
+        )),
+    )))
+    prog = ir.Program("ctxfuzz", loops=tuple(loops))
+    return prog, arrays, {}
+
+
 def random_wave_program(rng, max_depth: int = 2):
     """Random *executable* programs for the wave-plan property suite
     (tests/test_wave_plan.py): protected loads and stores over two
@@ -487,6 +574,20 @@ if HAVE_HYPOTHESIS:
         seed = draw(st.integers(0, 2**31))
         return random_spec_program(
             np.random.default_rng(seed), max_rows=max_rows
+        )
+
+    @st.composite
+    def stride_spec_programs(draw, max_n: int = 12):
+        seed = draw(st.integers(0, 2**31))
+        return random_stride_spec_program(
+            np.random.default_rng(seed), max_n=max_n
+        )
+
+    @st.composite
+    def context_spec_programs(draw, max_n: int = 8):
+        seed = draw(st.integers(0, 2**31))
+        return random_context_spec_program(
+            np.random.default_rng(seed), max_n=max_n
         )
 
     @st.composite

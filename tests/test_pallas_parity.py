@@ -24,6 +24,7 @@ SCALES = {
     "bnn": 12, "pagerank": 16, "fft": 32, "matpower": 12,
     "hist+add": 96, "tanh+spmv": 64,
     "spmv_ldtrip": 24, "bfs_front": 48, "chase_sum": 32,
+    "strided_scan": 24,
 }
 
 TRACE_MODES = {name: ("interp", "compiled") for name in programs.TABLE1}

@@ -2,10 +2,20 @@
 
 Pins the loss-of-decoupling speculation subsystem end to end:
 
-  * the three load-dependent kernels (``programs.SPEC_KERNELS``) run
+  * the four load-dependent kernels (``programs.SPEC_KERNELS``) run
     under ``speculation="auto"`` in every mode x engine, bit-identical
     to ``loopir.interpret`` AND to the independent numpy oracles in
     ``kernels/dynloop/ref.py``,
+  * the predictor-conformance matrix: every ``dae.PREDICTORS`` value
+    x both engines x every speculative kernel is arrays-exact, with
+    engine cycle counts inside the documented drift envelope — the
+    predictor knob moves *time*, never *values*,
+  * the ``predictor`` knob is inert where speculation never fires:
+    decoupled (Table-1) programs are bit-identical in cycles and
+    arrays under every predictor value, and ``predictor="auto"``
+    never loses to ``speculation="off"`` there,
+  * ``SimResult.spec_stats`` has the documented shape (top-level,
+    per-port and per-component-predictor counters),
   * ``speculation="off"`` still rejects, with diagnostics that name the
     consuming statement (op id / loop trip / AGU local) — the message
     shapes are part of the contract,
@@ -15,14 +25,18 @@ Pins the loss-of-decoupling speculation subsystem end to end:
     existence for invalid stores (they occupy the stream and ACK
     without DRAM),
   * ``SpecPlan`` structure: epoch tags non-decreasing per stream,
-    trigger/resolve consistency, last-value predictor accounting,
+    trigger/resolve consistency, predictor-zoo accounting (every
+    occurrence either predicted or confidence-suppressed into a wait
+    gate; phantoms only behind squash gates, capped by the run-ahead
+    window),
   * the DSE axis: ``speculation`` expands in ``SweepSpec``; the result
     identity folds ``off``/``auto`` (and ``squash_latency``) for
     kernels that never speculate,
   * the random differential: generated load-dependent-trip programs
+    plus stride-patterned and context-repeating pointer walks
     (tests/loopir_strategies.py) simulate oracle-exact in both engines
-    (deterministic seeds in tier-1; hypothesis strategy in the nightly
-    fuzz job),
+    under every predictor (deterministic seeds in tier-1; hypothesis
+    strategies in the nightly predictor-fuzz job),
   * TABLE1 stays frozen at the paper's nine kernels (the registry may
     grow, the paper's evaluation set may not).
 """
@@ -40,7 +54,10 @@ from repro.core import simulator
 from repro.core import speculate
 from repro.kernels.dynloop import ref as dynref
 
-SCALES = {"spmv_ldtrip": 24, "bfs_front": 32, "chase_sum": 24}
+SCALES = {
+    "spmv_ldtrip": 24, "bfs_front": 32, "chase_sum": 24,
+    "strided_scan": 24,
+}
 
 
 def _simulate_spec(name, mode, engine, scale=None, **kw):
@@ -85,9 +102,14 @@ def test_spec_kernels_match_independent_refs(name):
         )
         np.testing.assert_allclose(final["foff"], foff, atol=1e-12)
         np.testing.assert_allclose(final["visit"], visit, atol=1e-12)
-    else:  # chase_sum
+    elif name == "chase_sum":
         out = dynref.chase_sum_ref(
-            arrays["nxt"], arrays["w"], params["n"]
+            arrays["nxt"], arrays["w"], params["steps"]
+        )
+        np.testing.assert_allclose(final["out"], out, atol=1e-12)
+    else:  # strided_scan
+        out = dynref.strided_scan_ref(
+            arrays["ptr"], arrays["w"], params["n"]
         )
         np.testing.assert_allclose(final["out"], out, atol=1e-12)
 
@@ -109,6 +131,106 @@ def test_spec_kernel_engines_agree(name):
     assert rc.dram_requests == re_.dram_requests
     # same drift envelope as test_engine_diff (DESIGN.md §1.2)
     assert abs(rc.cycles - re_.cycles) <= max(2, int(0.02 * rc.cycles))
+
+
+# ---------------------------------------------------------------------------
+# predictor-conformance matrix: every predictor x both engines x every
+# speculative kernel — arrays oracle-exact, engines agree on squash
+# accounting and stay inside the cycle drift envelope
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("predictor", daelib.PREDICTORS)
+@pytest.mark.parametrize("name", programs.SPEC_KERNELS)
+def test_predictor_conformance_matrix(name, predictor):
+    rc, oracle, _ = _simulate_spec(name, "FUS2", "cycle", predictor=predictor)
+    re_, _, _ = _simulate_spec(name, "FUS2", "event", predictor=predictor)
+    for k in oracle:
+        np.testing.assert_array_equal(
+            rc.arrays[k], oracle[k], err_msg=f"cycle/{predictor}/{k}"
+        )
+        np.testing.assert_array_equal(
+            re_.arrays[k], oracle[k], err_msg=f"event/{predictor}/{k}"
+        )
+    # the predictor changes *when* gates resolve, never *what* commits:
+    # both engines see the same gate schedule, hence the same squashes
+    assert rc.squashed == re_.squashed
+    assert rc.dram_requests == re_.dram_requests
+    assert abs(rc.cycles - re_.cycles) <= max(2, int(0.02 * rc.cycles))
+    assert rc.spec_stats["predictor"] == predictor
+    assert re_.spec_stats["predictor"] == predictor
+
+
+@pytest.mark.parametrize("name", programs.TABLE1)
+def test_auto_predictor_never_loses_to_off_on_table1(name):
+    """Decoupled kernels never open a gate, so the full zoo under
+    ``auto`` costs exactly zero cycles over ``speculation="off"``."""
+    scale = max(8, programs.get(name).default_scale // 8)
+    prog, arrays, params = programs.get(name).make(scale)
+    off = simulator.simulate(prog, arrays, params, speculation="off")
+    auto = simulator.simulate(
+        prog, arrays, params, speculation="auto", predictor="auto"
+    )
+    assert auto.cycles <= off.cycles
+    assert auto.cycles == off.cycles  # stronger: a strict no-op
+    assert auto.squashed == 0 and auto.spec_stats == {}
+    for k in off.arrays:
+        np.testing.assert_array_equal(off.arrays[k], auto.arrays[k])
+
+
+@pytest.mark.parametrize("predictor", daelib.PREDICTORS)
+def test_predictor_knob_inert_without_speculation(predictor):
+    """Regression: on non-speculative programs every ``predictor=``
+    value is bit-identical — the knob must not leak into decoupled
+    scheduling."""
+    prog, arrays, params = programs.get("RAWloop").make(48)
+    base = simulator.simulate(prog, arrays, params)
+    for spec in ("off", "auto"):
+        res = simulator.simulate(
+            prog, arrays, params, speculation=spec, predictor=predictor
+        )
+        assert res.cycles == base.cycles
+        assert res.spec_stats == {}
+        for k in base.arrays:
+            np.testing.assert_array_equal(res.arrays[k], base.arrays[k])
+
+
+def test_spec_stats_shape():
+    """``SimResult.spec_stats`` is evidence surfaced to benchmarks and
+    DSE rows — its key set (top-level, per-port, per-component) is a
+    contract, pinned here for both engines."""
+    top = {
+        "predictor", "runahead", "predictions", "mispredictions",
+        "wait_gates", "squash_gates", "gates", "phantom_requests",
+        "phantom_capped", "cap_hits", "per_port", "by_predictor",
+    }
+    per_port = {"predictor", "predictions", "mispredictions", "waits"}
+    by_pred = {"mispredictions", "wait_gates", "squashed", "cap_hits"}
+    for engine in ("cycle", "event"):
+        res, _, _ = _simulate_spec(
+            "chase_sum", "FUS2", engine, predictor="auto"
+        )
+        s = res.spec_stats
+        assert set(s) == top, engine
+        assert s["predictor"] == "auto"
+        assert s["runahead"] == simulator.SimParams().spec_runahead
+        assert s["gates"] == s["wait_gates"] + s["squash_gates"]
+        assert s["per_port"] and all(
+            set(p) == per_port for p in s["per_port"].values()
+        )
+        # auto runs a tournament: component names appear in the stats
+        assert s["by_predictor"] and all(
+            set(v) == by_pred for v in s["by_predictor"].values()
+        )
+        assert set(s["by_predictor"]) <= {"last", "stride", "context"}
+        for p in s["per_port"].values():
+            assert p["predictor"] in ("last", "stride", "context")
+        # a fixed-predictor run reports that component only
+        res1, _, _ = _simulate_spec(
+            "chase_sum", "FUS2", engine, predictor="stride"
+        )
+        assert res1.spec_stats["predictor"] == "stride"
+        assert set(res1.spec_stats["by_predictor"]) <= {"stride"}
 
 
 def test_trace_modes_on_spec_programs():
@@ -327,10 +449,19 @@ def test_spec_plan_structure():
     )
     plan = spec_out[0]
     assert isinstance(plan, speculate.SpecPlan)
-    # one prediction per trip-load occurrence
-    assert plan.predictions == traces["ld_len"].n_req
+    # every trip-load occurrence is either predicted or confidence-
+    # suppressed into a wait gate — nothing falls through
+    assert plan.predictions + plan.wait_gates == traces["ld_len"].n_req
     assert 0 < plan.mispredictions <= plan.predictions
-    assert plan.n_gates == plan.mispredictions == len(plan.phantoms)
+    assert plan.n_gates == plan.mispredictions + plan.wait_gates
+    assert plan.n_gates == len(plan.phantoms)
+    # gate kinds partition the gates; phantoms only behind squashes
+    kinds = [plan.gate_kind[g] for g in range(plan.n_gates)]
+    assert kinds.count("squash") == plan.mispredictions
+    assert kinds.count("wait") == plan.wait_gates
+    for gid, lst in enumerate(plan.phantoms):
+        if plan.gate_kind[gid] == "wait":
+            assert lst == []
     # epoch tags are non-decreasing along every stream and only ever
     # point at allocated gates
     for op_id, g in plan.gates.items():
@@ -347,11 +478,16 @@ def test_spec_plan_structure():
     for gid, lst in enumerate(plan.phantoms):
         for op_id, c, _s in lst:
             per_gate_op[(gid, op_id)] = per_gate_op.get((gid, op_id), 0) + c
-    assert all(c <= speculate.RUNAHEAD_CAP for c in per_gate_op.values())
+    assert all(c <= plan.runahead for c in per_gate_op.values())
 
 
 def test_perfect_prediction_single_gate():
-    """Uniform row lengths: only the cold-start prediction misses."""
+    """Uniform row lengths: only the cold-start prediction misses.
+
+    Confidence gating shapes the trace: the cold miss (conf 4 -> 2)
+    suppresses the next two occurrences into wait gates while the
+    counter climbs back (3, then 4); the last three speculate and hit.
+    """
     prog = ir.Program("uni", loops=(
         ir.Loop("i", ir.Const(6), (
             ir.Load("ld_len", "lens", ir.Var("i")),
@@ -365,8 +501,9 @@ def test_perfect_prediction_single_gate():
     spec_out = []
     schedlib.trace_program(prog, dae, arrays, {}, spec_out=spec_out)
     plan = spec_out[0]
-    assert plan.predictions == 6
+    assert plan.predictions == 4  # occurrences 1, 4, 5, 6 speculate
     assert plan.mispredictions == 1  # 0.0 -> 3.0 cold start only
+    assert plan.wait_gates == 2  # occurrences 2-3 suppressed
     assert plan.phantom_requests == 0  # under-prediction squashes nothing
 
 
@@ -397,6 +534,76 @@ def test_result_key_folds_speculation_for_decoupled_kernels():
     assert d.result_key != e.result_key
 
 
+def test_result_key_folds_predictor_and_runahead():
+    """The predictor/run-ahead axes share result identity with
+    ``speculation``: folded to ``"-"`` wherever the knob cannot reach
+    a gate, distinct where it can."""
+    from repro import dse
+
+    # non-speculating points: predictor and spec_runahead fold away
+    a = dse.SweepPoint(kernel="RAWloop", scale=32, predictor="last")
+    b = dse.SweepPoint(kernel="RAWloop", scale=32, predictor="context")
+    assert a.predictor_class == b.predictor_class == "-"
+    assert a.runahead_class == b.runahead_class == "-"
+    assert a.result_key == b.result_key
+    c = dse.SweepPoint(
+        kernel="RAWloop", scale=32, sim=(("spec_runahead", 4),)
+    )
+    assert c.result_key == a.result_key
+    # STA never consults the SpecPlan either, even on spec kernels
+    s1 = dse.SweepPoint(
+        kernel="spmv_ldtrip", scale=32, mode="STA",
+        speculation="auto", predictor="last",
+    )
+    s2 = dse.SweepPoint(
+        kernel="spmv_ldtrip", scale=32, mode="STA",
+        speculation="auto", predictor="stride",
+    )
+    assert s1.predictor_class == s2.predictor_class == "-"
+    assert s1.result_key == s2.result_key
+    # speculating points: distinct predictors are distinct results...
+    d = dse.SweepPoint(
+        kernel="spmv_ldtrip", scale=32, speculation="auto",
+        predictor="last",
+    )
+    e = dse.SweepPoint(
+        kernel="spmv_ldtrip", scale=32, speculation="auto",
+        predictor="stride",
+    )
+    assert d.predictor_class == "last" and e.predictor_class == "stride"
+    assert d.result_key != e.result_key
+    # ...and so are distinct run-ahead windows (default surfaces too)
+    f = dse.SweepPoint(
+        kernel="spmv_ldtrip", scale=32, speculation="auto",
+        predictor="last", sim=(("spec_runahead", 4),),
+    )
+    assert d.runahead_class == simulator.SimParams().spec_runahead
+    assert f.runahead_class == 4
+    assert d.result_key != f.result_key
+
+
+def test_planner_folds_predictor_axis_into_shared_runs():
+    """A predictor sweep over {STA, FUS2} on a speculative kernel runs
+    STA once: the planner groups by predictor *class*, so the four STA
+    points share one group while FUS2 gets one per predictor."""
+    from repro.dse import planner
+    from repro.dse.spec import SweepSpec
+
+    pts = SweepSpec(
+        kernels=["spmv_ldtrip"], scales={"spmv_ldtrip": 16},
+        modes=("STA", "FUS2"), speculations=("auto",),
+        predictors=daelib.PREDICTORS,
+    ).points()
+    assert len(pts) == 2 * len(daelib.PREDICTORS)
+    groups = planner.plan(pts)
+    sta = [g for g in groups if all(r.rep.mode == "STA" for r in g.runs)]
+    fus = [g for g in groups if all(r.rep.mode == "FUS2" for r in g.runs)]
+    assert len(sta) == 1 and len(sta[0].runs) == 1  # one run serves all
+    assert len(sta[0].runs[0].point_indices) == len(daelib.PREDICTORS)
+    assert len(fus) == len(daelib.PREDICTORS)
+    assert sorted(g.predictor for g in fus) == sorted(daelib.PREDICTORS)
+
+
 def test_sweep_matches_standalone_on_spec_kernels():
     from repro import dse
 
@@ -405,6 +612,7 @@ def test_sweep_matches_standalone_on_spec_kernels():
         scales={"spmv_ldtrip": 16, "bfs_front": 24},
         modes=("STA", "FUS2"),
         speculations=("auto",),
+        predictors=("last", "context"),
     )
     res = dse.sweep(spec, validate=True)
     for pr in res.points:
@@ -413,7 +621,7 @@ def test_sweep_matches_standalone_on_spec_kernels():
         base = simulator.simulate(
             prog, arrays, params, mode=p.mode, sim=p.sim_params(),
             engine=p.engine, trace_mode=p.trace_mode,
-            speculation=p.speculation,
+            speculation=p.speculation, predictor=p.predictor,
         )
         assert base.cycles == pr.result.cycles, p
         assert base.squashed == pr.result.squashed
@@ -462,10 +670,44 @@ def _check_spec_differential(pap):
             )
 
 
+def _check_predictor_differential(pap):
+    """Oracle-exactness under *every* predictor knob, both engines —
+    the predictor changes the gate schedule, never the committed
+    values (speculate.py's oracle-stream soundness argument)."""
+    prog, arrays, params = pap
+    dae = daelib.decouple(prog, speculation="auto")
+    assert dae.spec, "generator must produce a speculative PE"
+    oracle = ir.interpret(prog, arrays, params)
+    for pred in daelib.PREDICTORS:
+        for engine in ("cycle", "event"):
+            res = simulator.simulate(
+                prog, arrays, params, mode="FUS2", engine=engine,
+                speculation="auto", predictor=pred, validate=True,
+            )
+            for k in oracle:
+                np.testing.assert_array_equal(
+                    res.arrays[k], oracle[k], err_msg=f"{pred}/{engine}/{k}"
+                )
+
+
 @pytest.mark.parametrize("seed", range(25))
 def test_spec_differential_seeded(seed):
     _check_spec_differential(
         strat.random_spec_program(np.random.default_rng(2000 + seed))
+    )
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_stride_predictor_differential_seeded(seed):
+    _check_predictor_differential(
+        strat.random_stride_spec_program(np.random.default_rng(3000 + seed))
+    )
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_context_predictor_differential_seeded(seed):
+    _check_predictor_differential(
+        strat.random_context_spec_program(np.random.default_rng(4000 + seed))
     )
 
 
@@ -475,3 +717,11 @@ if strat.HAVE_HYPOTHESIS:
     @given(strat.spec_programs())
     def test_spec_differential(pap):
         _check_spec_differential(pap)
+
+    @given(strat.stride_spec_programs())
+    def test_stride_predictor_differential(pap):
+        _check_predictor_differential(pap)
+
+    @given(strat.context_spec_programs())
+    def test_context_predictor_differential(pap):
+        _check_predictor_differential(pap)
