@@ -1,0 +1,164 @@
+"""Dependence-certifier benchmark: what static proofs buy at plan time.
+
+Produces the evidence file committed as ``BENCH_DEPS.json``:
+
+  * per Table-1 kernel (at ``paper_table1`` scales x ``--scale-mult``),
+    the certifier's verdict census over the enumerated hazard pairs and
+    how many pairs ``static_prune`` provably drops,
+  * hazard-plan build wall-clock with and without the certifier pass
+    (the prune pays the certifier once and synthesizes fewer checks),
+  * wave-plan symbolic admission: how many of the coarsener's requests
+    (and which ops) are admitted by certificate instead of per-address
+    enumeration, with end-to-end ``build_wave_plan`` wall-clock both
+    ways — the batching is asserted bit-identical while measuring.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_deps.py --smoke
+    PYTHONPATH=src python benchmarks/bench_deps.py \
+        --scale-mult 8 --out BENCH_DEPS.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.analysis import deps
+from repro.core import dae as daelib
+from repro.core import executor
+from repro.core import hazards as hz
+from repro.core import monotonic as mono
+from repro.core import programs
+from benchmarks.paper_table1 import SCALES, scaled
+
+
+def _time(fn, repeat=3):
+    best, out = float("inf"), None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_kernel(name: str, scale: int, repeat: int = 3) -> dict:
+    prog, arrays, params = programs.get(name).make(scale)
+    dres = daelib.decouple(prog)
+    infos = mono.analyze_program(prog)
+
+    t_base, plan_base = _time(
+        lambda: hz.build_plan(prog, dres, infos, forwarding=True), repeat
+    )
+    t_prune, plan_prune = _time(
+        lambda: hz.build_plan(prog, dres, infos, forwarding=True,
+                              static_prune=True),
+        repeat,
+    )
+    enumerated = list(plan_base.pairs) + [p for p, _r in plan_base.pruned]
+    verdicts = deps.certify_pairs(prog, enumerated)
+    census: dict[str, int] = {deps.NEVER: 0, deps.DISTANCE: 0, deps.UNKNOWN: 0}
+    for v in verdicts.values():
+        census[v.kind] += 1
+    n_static = sum(
+        1 for _p, r in plan_prune.pruned if r.startswith("static:")
+    )
+    assert len(plan_base.pairs) - len(plan_prune.pairs) == n_static
+
+    t_sym, wp_sym = _time(
+        lambda: executor.build_wave_plan(prog, arrays, params,
+                                         symbolic_admission=True),
+        repeat,
+    )
+    t_enum, wp_enum = _time(
+        lambda: executor.build_wave_plan(prog, arrays, params,
+                                         symbolic_admission=False),
+        repeat,
+    )
+    np.testing.assert_array_equal(wp_sym.req_step, wp_enum.req_step)
+
+    return {
+        "scale": scale,
+        "pairs_enumerated": len(enumerated),
+        "pairs_kept": len(plan_base.pairs),
+        "pairs_static_pruned": n_static,
+        "verdicts": {
+            "never_conflict": census[deps.NEVER],
+            "min_distance": census[deps.DISTANCE],
+            "unknown": census[deps.UNKNOWN],
+        },
+        "plan_wall_base_ms": round(t_base * 1e3, 3),
+        "plan_wall_prune_ms": round(t_prune * 1e3, 3),
+        "wave": {
+            "n_requests": int(len(wp_sym.req_step)),
+            "n_sym_requests": int(wp_sym.stats.n_sym_requests),
+            "sym_ops": list(wp_sym.stats.sym_ops),
+            "wall_sym_s": round(t_sym, 3),
+            "wall_enum_s": round(t_enum, 3),
+        },
+    }
+
+
+def bench(scale_mult: int = 8, repeat: int = 3) -> dict:
+    scales = scaled(scale_mult)
+    out: dict = {"scales": scales, "scale_mult": scale_mult, "kernels": {}}
+    for name in programs.TABLE1:
+        row = bench_kernel(name, scales[name], repeat)
+        out["kernels"][name] = row
+        print(
+            f"{name:10s} pairs {row['pairs_kept']}/"
+            f"{row['pairs_enumerated']} kept, {row['pairs_static_pruned']} "
+            f"static-pruned; wave {row['wave']['n_sym_requests']}/"
+            f"{row['wave']['n_requests']} symbolically admitted "
+            f"({row['wave']['wall_enum_s']}s -> {row['wave']['wall_sym_s']}s)",
+            flush=True,
+        )
+    out["total_static_pruned"] = sum(
+        r["pairs_static_pruned"] for r in out["kernels"].values()
+    )
+    out["total_sym_requests"] = sum(
+        r["wave"]["n_sym_requests"] for r in out["kernels"].values()
+    )
+    # the ISSUE's evidence bar: at least one Table-1 kernel benefits
+    assert out["total_static_pruned"] >= 1
+    assert out["total_sym_requests"] >= 1
+    return out
+
+
+def smoke() -> None:
+    """Tier-1 CI smoke: Table 1 at 1x, single repetition, identity
+    assertions live in ``bench_kernel``."""
+    data = bench(scale_mult=1, repeat=1)
+    print(
+        f"smoke OK: {len(data['kernels'])} kernels, "
+        f"{data['total_static_pruned']} pair(s) static-pruned, "
+        f"{data['total_sym_requests']} request(s) symbolically admitted"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_DEPS.json")
+    ap.add_argument("--scale-mult", type=int, default=8)
+    ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tier-1 CI smoke: Table 1 at 1x, identity-asserted, no JSON",
+    )
+    a = ap.parse_args()
+    if a.smoke:
+        smoke()
+        return
+    data = bench(scale_mult=a.scale_mult, repeat=a.repeat)
+    with open(a.out, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    print(
+        f"wrote {a.out}: {data['total_static_pruned']} pair(s) pruned, "
+        f"{data['total_sym_requests']} request(s) symbolically admitted"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,7 @@ def batch_conflict_free_waves(
     req_flat: np.ndarray,
     req_store: np.ndarray,
     feed_max_wave: np.ndarray,
+    symbolic_free: np.ndarray = None,
 ) -> tuple[np.ndarray, int]:
     """Greedily merge consecutive waves into batched steps.
 
@@ -65,12 +66,25 @@ def batch_conflict_free_waves(
     from the plan's dep maps. Returns ``(step_of_wave, n_steps)`` with
     ``step_of_wave`` non-decreasing, so waves stay contiguous inside
     their step and the wave order is preserved batch-internally.
+
+    ``symbolic_free`` is the certifier's admission fast path
+    (``analysis.deps.symbolically_free_ops``, DESIGN.md §12): a (n,)
+    bool marking requests of ops *proven* address-disjoint from every
+    batched store (stores additionally proven self-injective). Such
+    requests skip the ``stored``-set membership test and — for stores —
+    the insertion: both are statically known no-ops, so the produced
+    batching is bit-identical (tested in tests/test_deps.py) while whole
+    dep-edges are admitted without enumerating a single address. The
+    dataflow feed check is *not* skipped — it is about value
+    availability, not address conflicts.
     """
     n = len(req_wave)
     n_waves = int(req_wave.max()) + 1 if n else 0
     step_of_wave = np.zeros(n_waves, dtype=np.int64)
     if n_waves == 0:
         return step_of_wave, 0
+    if symbolic_free is None:
+        symbolic_free = np.zeros(n, dtype=bool)
     order = np.argsort(req_wave, kind="stable")
     bounds = np.searchsorted(req_wave[order], np.arange(n_waves + 1))
     step = 0
@@ -81,12 +95,13 @@ def batch_conflict_free_waves(
         if w != batch_start:
             ok = True
             for i in rows:
-                a = int(req_flat[i])
                 if req_store[i]:
-                    if feed_max_wave[i] >= batch_start or a in stored:
+                    if feed_max_wave[i] >= batch_start or (
+                        not symbolic_free[i] and int(req_flat[i]) in stored
+                    ):
                         ok = False
                         break
-                elif a in stored:
+                elif not symbolic_free[i] and int(req_flat[i]) in stored:
                     ok = False
                     break
             if not ok:
@@ -94,7 +109,7 @@ def batch_conflict_free_waves(
                 batch_start = w
                 stored.clear()
         for i in rows:
-            if req_store[i]:
+            if req_store[i] and not symbolic_free[i]:
                 stored.add(int(req_flat[i]))
         step_of_wave[w] = step
     return step_of_wave, step + 1

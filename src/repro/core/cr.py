@@ -21,6 +21,7 @@ arithmetic is used wherever the paper substitutes maxima.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Union
 
 INF = 10**18  # effectively unbounded
@@ -298,7 +299,7 @@ def cr_mul(a: CRExpr, b: CRExpr) -> CRExpr:
 
 
 def _invariant_at(e: CRExpr, depth: int) -> bool:
-    return all(c.depth < depth for c in e.crs()) and not _has_opaque(e)
+    return all(c.depth < depth for c in e.crs()) and not has_opaque(e)
 
 
 def _mentions_depth(e: CRExpr, depth: int) -> bool:
@@ -311,25 +312,28 @@ def _mentions_depth(e: CRExpr, depth: int) -> bool:
 
 def is_affine_expr(e: CRExpr) -> bool:
     crs = e.crs()
-    return bool(crs) and all(c.is_affine for c in crs) and not _has_opaque(e)
+    return bool(crs) and all(c.is_affine for c in crs) and not has_opaque(e)
 
 
 def is_monotonic_expr(e: CRExpr) -> bool:
     """Paper: an address expression is monotonic w.r.t. a loop depth iff
     the CR expression consists of only monotonic CRs."""
-    if _has_opaque(e):
+    if has_opaque(e):
         return False
     crs = e.crs()
     return all(c.is_monotonic for c in crs)
 
 
-def _has_opaque(e: CRExpr) -> bool:
+def has_opaque(e: CRExpr) -> bool:
+    """True iff ``e`` contains a ``COpaque`` term anywhere — i.e. the
+    analysis cannot see the whole value evolution (a data-dependent read
+    or an untranslatable sub-expression hides part of it)."""
     if isinstance(e, COpaque):
         return True
     if isinstance(e, (CAdd, CMul)):
-        return _has_opaque(e.a) or _has_opaque(e.b)
+        return has_opaque(e.a) or has_opaque(e.b)
     if isinstance(e, CR):
-        return _has_opaque(e.base) or _has_opaque(e.step)
+        return has_opaque(e.base) or has_opaque(e.step)
     return False
 
 
@@ -345,7 +349,7 @@ def step_at_depth(e: CRExpr, depth: int) -> Optional[CRExpr]:
     """
     steps = [c.step for c in e.crs() if c.depth == depth]
     if not steps:
-        return None if _has_opaque(e) else CConst(0)
+        return None if has_opaque(e) else CConst(0)
     out = steps[0]
     for s in steps[1:]:
         out = cr_add(out, s)
@@ -440,3 +444,158 @@ def non_monotonic_depths(
                 out.add(k)
                 break
     return out
+
+
+# ---------------------------------------------------------------------------
+# Dependence-certificate primitives (analysis/deps.py, DESIGN.md §12)
+#
+# Everything below reasons about the *value set* and *evolution* of an
+# address stream over a full loop nest, rather than per-depth
+# monotonicity: trip-aware value ranges (interval disjointness), residue
+# classes (stride disjointness: a[2i] vs a[2i+1]), exact stream
+# differences, and a lower bound on the increase between consecutive
+# nest instances. All are conservative — a ``None``/trivial answer is
+# always allowed, a definite answer must hold for every in-range
+# assignment of symbols.
+# ---------------------------------------------------------------------------
+
+
+def cr_diff(a: CRExpr, b: CRExpr) -> CRExpr:
+    """``a - b`` with zero-step add-recurrences collapsed to their base.
+
+    The collapse makes identical (or offset-identical) streams fold to a
+    constant: ``{0,+,1}@1 - {0,+,1}@1`` becomes ``0``, not
+    ``{0,+,0}@1`` — which is what lets the certifier prove exact
+    per-instance differences."""
+    return _collapse(cr_add(a, cr_mul(CConst(-1), b)))
+
+
+def _collapse(e: CRExpr) -> CRExpr:
+    if isinstance(e, CR):
+        base = _collapse(e.base)
+        step = _collapse(e.step)
+        if e.op == "+" and step == CConst(0):
+            return base
+        return CR(base, e.op, step, e.depth)
+    if isinstance(e, CAdd):
+        return cr_add(_collapse(e.a), _collapse(e.b))
+    if isinstance(e, CMul):
+        return cr_mul(_collapse(e.a), _collapse(e.b))
+    return e
+
+
+def value_range(e: CRExpr, trips: dict[int, CRExpr]) -> Interval:
+    """Trip-aware range of ``e`` over one full execution of its nest.
+
+    Unlike ``CR.range`` (which has no trip information and answers
+    ``[lo, INF)`` for any non-negative step), an add-recurrence at depth
+    ``d`` contributes ``step * [0, trip_d - 1]``, so two streams with
+    disjoint footprints (``a[i]`` vs ``a[T + i]`` with ``i < T``) get
+    provably disjoint intervals. ``trips[d]`` is the symbolic trip count
+    of depth ``d``; missing depths fall back to unbounded. Opaque terms
+    contribute their asserted range (§3.3 annotations), so hinted
+    data-dependent streams still participate in range disjointness."""
+    if isinstance(e, CR):
+        if e.op == "+":
+            b = value_range(e.base, trips)
+            s = value_range(e.step, trips)
+            t = trips.get(e.depth)
+            t_hi = t.range().hi if t is not None else INF
+            iters = Interval(0, clamp(max(t_hi - 1, 0)))
+            return b + s * iters
+        return e.range()
+    if isinstance(e, CAdd):
+        return value_range(e.a, trips) + value_range(e.b, trips)
+    if isinstance(e, CMul):
+        return value_range(e.a, trips) * value_range(e.b, trips)
+    return e.range()
+
+
+def base_value(e: CRExpr) -> Optional[int]:
+    """The concrete value of ``e`` at the all-zero iteration vector, or
+    None when it is not a known integer (symbols, opaque terms,
+    multiplicative recurrences)."""
+    if isinstance(e, CConst):
+        return e.v
+    if isinstance(e, CR):
+        return base_value(e.base) if e.op == "+" else None
+    if isinstance(e, CAdd):
+        a, b = base_value(e.a), base_value(e.b)
+        return None if a is None or b is None else a + b
+    if isinstance(e, CMul):
+        a, b = base_value(e.a), base_value(e.b)
+        return None if a is None or b is None else a * b
+    return None
+
+
+def residue_class(e: CRExpr) -> Optional[tuple[int, int]]:
+    """``(g, r)`` such that every value of ``e`` is ``≡ r (mod g)``.
+
+    Requires every recurrence to be additive with a *constant* step and
+    a constant base value: the stream is then ``r + Σ_d s_d·i_d`` with
+    ``g = gcd(s_d)``. ``g == 0`` means the stream is the single constant
+    ``r``. Returns None when no such proof exists. This is the stride
+    lens of the certifier: ``a[2i]`` → ``(2, 0)`` vs ``a[2i+1]`` →
+    ``(2, 1)`` proves disjointness regardless of trip counts."""
+    if has_opaque(e):
+        return None
+    crs = e.crs()
+    if any(c.op != "+" for c in crs):
+        return None
+    b0 = base_value(e)
+    if b0 is None:
+        return None
+    g = 0
+    for d in {c.depth for c in crs}:
+        s = step_at_depth(e, d)
+        if not isinstance(s, CConst):
+            return None
+        g = math.gcd(g, abs(s.v))
+    return (g, b0 % g if g else b0)
+
+
+def residues_disjoint(
+    a: Optional[tuple[int, int]], b: Optional[tuple[int, int]]
+) -> bool:
+    """True iff the two residue classes can never produce equal values:
+    distinct constants, or residues that differ mod ``gcd(g_a, g_b) ≥ 2``."""
+    if a is None or b is None:
+        return False
+    (ga, ra), (gb, rb) = a, b
+    m = math.gcd(ga, gb)
+    if m == 0:
+        return ra != rb
+    return m >= 2 and (ra - rb) % m != 0
+
+
+def min_adjacent_increase(
+    e: CRExpr, trips: dict[int, CRExpr], n_depths: int
+) -> Optional[int]:
+    """Conservative lower bound on ``e(next) - e(cur)`` over *adjacent*
+    instances of an ``n_depths``-deep nest (lexicographic order).
+
+    When the outermost coordinate that advances is depth ``m``, the
+    difference is ``step_m - Σ_{j>m} step_j · (executed iterations of
+    j)``, so the bound at ``m`` is ``lo(step_m) + Σ_{j>m}
+    lo(step_j · [-(trip_j - 1), 0])`` and the result is the min over
+    ``m``. ``≥ 1`` proves the stream strictly increasing (hence
+    injective). None when opaque or multiplicative recurrences make the
+    per-iteration delta unknown."""
+    if has_opaque(e) or any(c.op == "*" for c in e.crs()):
+        return None
+    lo = None
+    for m in range(1, n_depths + 1):
+        sm = step_at_depth(e, m)
+        if sm is None:
+            return None
+        bound = sm.range().lo
+        for j in range(m + 1, n_depths + 1):
+            sj = step_at_depth(e, j)
+            if sj is None:
+                return None
+            t = trips.get(j)
+            t_hi = t.range().hi if t is not None else INF
+            back = Interval(clamp(-max(t_hi - 1, 0)), 0)
+            bound = clamp(bound + (sj.range() * back).lo)
+        lo = bound if lo is None else min(lo, bound)
+    return lo

@@ -163,11 +163,18 @@ class EventEngine:
     """LSQ / FUS1 / FUS2 execution with vectorized waves (module doc)."""
 
     def __init__(self, comp, traces, arrays, params, mode, p,
-                 oracle_loads: Optional[dict] = None, shared=None, spec=None):
+                 oracle_loads: Optional[dict] = None, shared=None, spec=None,
+                 validate_hints: bool = False):
         self.comp = comp
         self.traces = traces
         self.mode = mode
         self.p = p
+        if validate_hints:
+            # MonotonicHint sanitizer (DESIGN.md §12): raises
+            # analysis.deps.HintViolation before any timing runs
+            from repro.analysis import deps as depslib
+
+            depslib.check_hinted_traces(comp.program, traces)
         self.forwarding = mode == "FUS2"
         self.sequential = mode == "LSQ"
         self.burst_size = 1 if mode == "LSQ" else p.burst_size

@@ -76,6 +76,11 @@ class WaveStats:
     n_waves: int
     sequential_depth: int  # = n_requests (one request per step, fused b/w)
     n_steps: int = 0  # batched gather→scatter steps (<= n_waves)
+    # symbolic admission fast path (analysis/deps.py, DESIGN.md §12):
+    # requests of certifier-proven conflict-free ops skip the
+    # coarsener's address enumeration entirely
+    n_sym_requests: int = 0
+    sym_ops: tuple = ()
 
     @property
     def parallelism(self) -> float:
@@ -153,6 +158,14 @@ class WavePlan:
     # the edge's circular slots live at [base, base+depth) inside
     # mem_size (zero-init, not in array_order)
     fifo_edges: list = dataclasses.field(default_factory=list)
+    # MonotonicHint sanitizer data (DESIGN.md §12): one dict per hinted
+    # op — ``op``, ``resets`` (request ordinals where an asserted
+    # non-monotonic loop was re-entered, the only legal decrease
+    # points), ``innermost`` (the hint's innermost_monotonic bit).
+    # None when hints exist but capture was impossible (speculative
+    # programs run the unhooked walk); ``drive_plan(validate_hints=
+    # True)`` then refuses rather than silently skipping.
+    hint_checks: Optional[list] = dataclasses.field(default_factory=list)
 
     @property
     def n_requests(self) -> int:
@@ -243,6 +256,7 @@ def build_wave_plan(
     predictor: str = "auto",
     batch_waves: bool = True,
     fifo_depth: int = 4,
+    symbolic_admission: bool = True,
 ) -> WavePlan:
     """Run the AGU/CU front-end and emit the backend-consumable plan.
 
@@ -265,6 +279,12 @@ def build_wave_plan(
     ``batch_waves`` (default on) coarsens the wave partition into
     batched steps (WavePlan contract 5); ``False`` keeps one step per
     wave — the partition itself is identical either way.
+    ``symbolic_admission`` (default on) feeds the certifier's per-op
+    conflict-freedom proofs (``analysis.deps.symbolically_free_ops``)
+    to the coarsener so proven-disjoint dep-edges batch without address
+    enumeration — the resulting steps are bit-identical, the flag only
+    controls whether the fast path (and its ``WaveStats`` accounting)
+    is used.
 
     Cross-PE FIFO edges (DESIGN.md §11) become ``fifo_depth`` circular
     pseudo-memory slots per edge, appended after the real arrays in the
@@ -335,12 +355,34 @@ def build_wave_plan(
     fifo_events: list[tuple[int, str, int, float]] = []
     n_real = [0]
 
+    # MonotonicHint sanitizer capture (DESIGN.md §12): for every hinted
+    # op, record the request ordinals at which its deepest *asserted*
+    # non-monotonic loop is (re-)entered — exactly the positions where
+    # the address stream may legally decrease. ``drive_plan(
+    # validate_hints=True)`` replays the positional check.
+    hinted = [(op, path) for op, path in program.mem_ops() if op.hint is not None]
+    hint_count: dict[str, int] = {}
+    hint_resets: dict[str, list[int]] = {}
+    hint_marker: dict[int, list[str]] = {}
+    if hinted and not dae.spec:
+        from repro.analysis import deps as depslib
+
+        for op, path in hinted:
+            hint_count[op.id] = 0
+            hint_resets[op.id] = []
+            if op.hint.innermost_monotonic:
+                max_nm = depslib._max_allowed_reset_depth(op.hint, len(path))
+                if max_nm >= 1:
+                    hint_marker.setdefault(id(path[max_nm]), []).append(op.id)
+
     def aux_hook(op_id, values):
         env_rows[op_id].append(values)
 
     def hook(op_id, addr, is_store, valid, value):
         n_real[0] += 1
         per_op_vv.setdefault(op_id, []).append((valid, value))
+        if op_id in hint_count:
+            hint_count[op_id] += 1
         if is_store:
             for ld, rows in dep_rows[op_id].items():
                 rows.append(counts.get(ld, 0) - 1)
@@ -352,7 +394,7 @@ def build_wave_plan(
         if trace_mode == "interp":
             interp_stream.append((op_id, addr, is_store))
 
-    loop_hook = None
+    fifo_loop_hook = None
     if fifo_spec:
         push_leaves: dict[int, list] = {}
         pop_leaves: dict[int, list] = {}
@@ -360,7 +402,7 @@ def build_wave_plan(
             push_leaves.setdefault(id(dae.pes[e.prod_pe].leaf), []).append(e)
             pop_leaves.setdefault(id(dae.pes[e.cons_pe].leaf), []).append(e)
 
-        def loop_hook(loop, phase, reader):
+        def fifo_loop_hook(loop, phase, reader):
             if phase == "enter":
                 for e in pop_leaves.get(id(loop), ()):
                     # the enclosing scope holds the producer's token
@@ -377,6 +419,16 @@ def build_wave_plan(
                     fifo_events.append(
                         (n_real[0], "push", e.idx, float(reader(e.local)))
                     )
+
+    loop_hook = fifo_loop_hook
+    if hint_marker:
+
+        def loop_hook(loop, phase, reader):
+            if phase == "enter":
+                for o in hint_marker.get(id(loop), ()):
+                    hint_resets[o].append(hint_count[o])
+            if fifo_loop_hook is not None:
+                fifo_loop_hook(loop, phase, reader)
 
     if dae.spec:
         # speculative programs get the documented auto-reject
@@ -611,16 +663,50 @@ def build_wave_plan(
     }
     op_nreq = {o: len(per_op_vv.get(o, ())) for o in op_ids}
 
+    # symbolic admission certificates (analysis/deps.py, DESIGN.md §12):
+    # requests of certifier-proven conflict-free ops skip the
+    # coarsener's address enumeration. FIFO pseudo-ops are never
+    # certified (their slot streams are circular by construction).
+    sym_free = None
+    sym_ops: tuple = ()
+    n_sym = 0
+    if symbolic_admission:
+        from repro.analysis import deps as depslib
+
+        free = depslib.symbolically_free_ops(program)
+        sym_ops = tuple(sorted(o for o, ok in free.items() if ok))
+        free_arr = np.asarray(
+            [free.get(o, False) for o in op_ids], dtype=bool
+        ) if op_ids else np.zeros(0, dtype=bool)
+        sym_free = free_arr[req_op] if n else np.zeros(0, dtype=bool)
+        n_sym = int(sym_free.sum())
+
     if batch_waves:
         step_of_wave, n_steps = coarsenlib.batch_conflict_free_waves(
-            waves, req_flat, req_store, feed_max,
+            waves, req_flat, req_store, feed_max, symbolic_free=sym_free,
         )
         req_step = step_of_wave[waves] if n else waves.copy()
     else:
         req_step, n_steps = waves.copy(), n_waves
 
+    # hint sanitizer data (None = hints present but capture impossible:
+    # the speculative walk has no loop hook)
+    hint_checks: Optional[list] = None
+    if not (dae.spec and hinted):
+        hint_checks = [
+            {
+                "op": op.id,
+                "resets": np.asarray(
+                    sorted(set(hint_resets.get(op.id, ()))), dtype=np.int64
+                ),
+                "innermost": bool(op.hint.innermost_monotonic),
+            }
+            for op, _path in hinted
+        ]
+
     stats = WaveStats(
         n_requests=n, n_waves=n_waves, sequential_depth=n, n_steps=n_steps,
+        n_sym_requests=n_sym, sym_ops=sym_ops,
     )
     return WavePlan(
         program=program, params=dict(params),
@@ -631,7 +717,7 @@ def build_wave_plan(
         req_wave=waves, req_step=req_step, req_ordinal=req_ordinal,
         tables=tables, env=env, dep_maps=dep_maps,
         array_order=protected, base=base, mem_size=off,
-        stats=stats, fifo_edges=fifo_meta,
+        stats=stats, fifo_edges=fifo_meta, hint_checks=hint_checks,
     )
 
 
@@ -762,6 +848,25 @@ def validate_plan(plan: WavePlan) -> None:
         )
 
 
+def validate_plan_hints(plan: WavePlan) -> None:
+    """Check every hinted op's request stream against its asserted
+    monotonicity (``analysis.deps.check_hint_positions``): raises
+    ``HintViolation`` with op id + first violating (instance, addr)."""
+    from repro.analysis import deps as depslib
+
+    if plan.hint_checks is None:
+        raise NotImplementedError(
+            "validate_hints: hint capture is unavailable for speculative "
+            "programs (the run-ahead walk has no loop hook)"
+        )
+    for hc in plan.hint_checks:
+        i = plan.op_ids.index(hc["op"])
+        rows = np.flatnonzero(plan.req_op == i)  # program order
+        depslib.check_hint_positions(
+            hc["op"], plan.req_addr[rows], hc["resets"], hc["innermost"]
+        )
+
+
 def drive_plan(
     plan: WavePlan,
     mem_step,
@@ -772,6 +877,7 @@ def drive_plan(
     lib: str = "np",
     check: bool = True,
     max_steps: Optional[int] = None,
+    validate_hints: bool = False,
 ) -> tuple[int, bool]:
     """Shared step-loop driver for every backend.
 
@@ -787,7 +893,14 @@ def drive_plan(
     ``step_of``/``n_steps`` default to the plan's batched partition;
     pass ``req_wave`` for one step per wave, or ``arange(n)`` for the
     sequential baseline. Returns (steps taken, ran to completion).
+
+    ``validate_hints=True`` runs the MonotonicHint sanitizer
+    (``validate_plan_hints``) before stepping: a user hint contradicted
+    by the actual address stream raises ``analysis.deps.HintViolation``
+    instead of silently executing with an unsound hazard plan.
     """
+    if validate_hints:
+        validate_plan_hints(plan)
     if step_of is None:
         step_of = plan.req_step
         n_steps = plan.stats.n_steps
@@ -901,6 +1014,8 @@ def execute(
     backend: str = "numpy",
     batch_waves: bool = True,
     fifo_depth: int = 4,
+    symbolic_admission: bool = True,
+    validate_hints: bool = False,
 ) -> ExecResult:
     """Wave-partitioned fused execution of ``program``.
 
@@ -933,12 +1048,21 @@ def execute(
     buffer (DESIGN.md §11). Final arrays are identical for any depth
     >= 1 — a shallower buffer only tightens backpressure, i.e. grows
     the wave/step count.
+
+    ``symbolic_admission`` toggles the certifier's wave-batching fast
+    path (bit-identical steps either way, DESIGN.md §12);
+    ``validate_hints=True`` checks every ``MonotonicHint`` against the
+    plan's actual request streams and raises
+    ``analysis.deps.HintViolation`` on a lie.
     """
     plan = build_wave_plan(
         program, arrays, params, trace_mode=trace_mode,
         speculation=speculation, predictor=predictor,
         batch_waves=batch_waves, fifo_depth=fifo_depth,
+        symbolic_admission=symbolic_admission,
     )
+    if validate_hints:
+        validate_plan_hints(plan)
     if backend == "numpy":
         out = _replay_numpy(plan, arrays)
     elif backend == "pallas":

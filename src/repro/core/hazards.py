@@ -136,7 +136,21 @@ def build_plan(
     dae: daelib.DAEResult,
     infos: dict[str, mono.AddressInfo],
     forwarding: bool = False,
+    static_prune: bool = False,
 ) -> HazardPlan:
+    """Enumerate, synthesize and prune the hazard plan (module doc).
+
+    ``static_prune=True`` additionally drops pairs the symbolic
+    dependence certifier (``analysis/deps.py``) proves *forced-pass*:
+    their runtime HazardSafetyCheck is statically a tautology (the §5.6
+    NoDependence disjunct is true at every evaluation and no reset
+    terms exist), so removal is provably timing-invisible — cycles and
+    arrays stay bit-identical (tested across every registered kernel in
+    tests/test_deps.py). Dropped pairs land in ``plan.pruned`` with a
+    ``"static: ..."`` reason, so ``Compiled.all_pairs`` (and hence STA)
+    is unchanged. Forced-pass pairs are never used as transitive chain
+    links (NoDependence links are excluded), so the kept set equals the
+    baseline kept set minus exactly the dropped pairs."""
     ops = program.mem_ops()
     topo = program.op_index()
     by_array: dict[str, list] = {}
@@ -203,6 +217,20 @@ def build_plan(
     # ---- pruning ----------------------------------------------------------
     pruned: list[tuple[HazardPair, str]] = []
     kept: list[HazardPair] = []
+
+    # rule 0 (opt-in): certifier-proven forced-pass pairs (DESIGN.md §12)
+    if static_prune and enumerated:
+        from repro.analysis import deps as depslib
+
+        verdicts = depslib.certify_pairs(program, enumerated)
+        remaining: list[HazardPair] = []
+        for p in enumerated:
+            v = verdicts[(p.dst, p.src)]
+            if v.forced_pass:
+                pruned.append((p, f"static: {v.evidence}"))
+            else:
+                remaining.append(p)
+        enumerated = remaining
 
     # rule 1: WAR where the written value depends on the read value [39]
     stage1: list[HazardPair] = []

@@ -125,10 +125,6 @@ def _to_cr(
     raise _Untranslatable(f"cannot translate {type(e).__name__}")
 
 
-def _contains_opaque(e: crlib.CRExpr) -> bool:
-    return crlib._has_opaque(e)
-
-
 def analyze_op(
     op: Union[ir.Load, ir.Store], path: tuple[ir.Loop, ...]
 ) -> AddressInfo:
@@ -164,7 +160,7 @@ def analyze_op(
         cre = _to_cr(op.addr, depth_of, ivars)
     except _Untranslatable:
         cre = None
-    if cre is None or _contains_opaque(cre):
+    if cre is None or crlib.has_opaque(cre):
         # unanalyzable without an annotation: conservatively non-monotonic
         # at every depth. The op is still *supported* (paper hist-style
         # codes): consumers fall back to program order and sentinels.

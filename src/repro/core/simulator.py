@@ -174,11 +174,13 @@ class Compiled:
         trace_mode: str = "auto",
         speculation: str = "off",
         predictor: str = "auto",
+        static_prune: bool = False,
     ):
         self.program = program
         self.trace_mode = trace_mode
         self.speculation = speculation
         self.predictor = predictor
+        self.static_prune = static_prune
         self.dae = daelib.decouple(
             program, speculation=speculation, predictor=predictor
         )
@@ -208,7 +210,9 @@ class Compiled:
                     "no token-protocol semantics"
                 )
         self.infos = mono.analyze_program(program)
-        self.plan = hz.build_plan(program, self.dae, self.infos, forwarding)
+        self.plan = hz.build_plan(
+            program, self.dae, self.infos, forwarding, static_prune=static_prune
+        )
         self.op_array = {op.id: op.array for op, _ in program.mem_ops()}
         self.op_path = {op.id: path for op, path in program.mem_ops()}
         self.loop_pos, self.op_pos = program.static_positions()
@@ -395,11 +399,18 @@ class Engine:
         p: SimParams,
         shared: Optional[SharedArtifacts] = None,
         spec=None,
+        validate_hints: bool = False,
     ):
         self.comp = comp
         self.traces = traces
         self.mode = mode
         self.p = p
+        if validate_hints:
+            # MonotonicHint sanitizer (DESIGN.md §12): raises
+            # analysis.deps.HintViolation before any timing runs
+            from repro.analysis import deps as depslib
+
+            depslib.check_hinted_traces(comp.program, traces)
         # speculative AGU plan (speculate.SpecPlan): per-request epoch
         # gates + squash traffic; None for non-speculative programs
         self.spec = spec
@@ -895,6 +906,8 @@ def simulate(
     trace_mode: str = "auto",
     speculation: str = "off",
     predictor: str = "auto",
+    static_prune: bool = False,
+    validate_hints: bool = False,
 ) -> SimResult:
     """Simulate ``program`` under one of the four evaluated systems.
 
@@ -928,6 +941,15 @@ def simulate(
     run-ahead window is ``SimParams.spec_runahead``. Final arrays stay
     bit-identical to the sequential oracle under every setting — the
     predictor only moves epoch gates and phantom traffic.
+
+    ``static_prune`` lets the symbolic dependence certifier
+    (``analysis/deps.py``, DESIGN.md §12) drop hazard pairs whose
+    runtime check is provably a tautology — cycles and arrays stay
+    bit-identical, the plan just carries fewer pairs. ``validate_hints``
+    is the dynamic complement: every user ``MonotonicHint`` is checked
+    against the op's actual address stream and a lying hint raises
+    ``analysis.deps.HintViolation`` with the op id and first violating
+    (instance, addr) pair.
     """
     assert mode in ("STA", "LSQ", "FUS1", "FUS2"), f"unknown mode {mode!r}"
     assert engine in ("cycle", "event"), f"unknown engine {engine!r}"
@@ -937,6 +959,7 @@ def simulate(
     comp = Compiled(
         program, forwarding=(mode == "FUS2"), trace_mode=trace_mode,
         speculation=speculation, predictor=predictor,
+        static_prune=static_prune,
     )
     spec_out: list = []
     oracle_loads: Optional[dict[str, list[float]]] = None
@@ -965,6 +988,7 @@ def simulate(
         comp, traces, arrays, params, mode=mode, sim=p, engine=engine,
         oracle_loads=oracle_loads if (validate and mode != "STA") else None,
         spec_plan=spec_out[0] if spec_out else None,
+        validate_hints=validate_hints,
     )
 
 
@@ -979,6 +1003,7 @@ def simulate_traced(
     oracle_loads: Optional[dict] = None,
     shared: Optional[SharedArtifacts] = None,
     spec_plan=None,
+    validate_hints: bool = False,
 ) -> SimResult:
     """Simulate from an already-compiled front-end.
 
@@ -999,6 +1024,10 @@ def simulate_traced(
     """
     p = sim or SimParams()
     if mode == "STA":
+        if validate_hints:
+            from repro.analysis import deps as depslib
+
+            depslib.check_hinted_traces(comp.program, traces)
         return _simulate_sta(comp, traces, arrays, params, p, shared=shared)
     assert not (comp.dae.spec and spec_plan is None), (
         "speculative program simulated without its SpecPlan — pass "
@@ -1011,10 +1040,12 @@ def simulate_traced(
         ev = engine_event.EventEngine(
             comp, traces, arrays, params, mode, p,
             oracle_loads=oracle_loads, shared=shared, spec=spec_plan,
+            validate_hints=validate_hints,
         )
         return ev.run()
     eng = Engine(
-        comp, traces, arrays, params, mode, p, shared=shared, spec=spec_plan
+        comp, traces, arrays, params, mode, p, shared=shared, spec=spec_plan,
+        validate_hints=validate_hints,
     )
     if oracle_loads is not None:
         eng.oracle_loads = {k: list(v) for k, v in oracle_loads.items()}

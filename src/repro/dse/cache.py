@@ -5,10 +5,11 @@ One entry per *result key*: a ``SimResult`` stored as an ``.npz``
 name. The key hashes everything the result depends on — and nothing it
 does not:
 
-  * **code version** — sha256 over the source bytes of ``repro.core``
-    and ``repro.dse``; any change to the simulator/compiler/DSE code
-    invalidates every entry (conservative by design: results are cheap
-    to recompute relative to debugging a stale cache),
+  * **code version** — sha256 over the source bytes of ``repro.core``,
+    ``repro.analysis`` and ``repro.dse``; any change to the
+    simulator/compiler/certifier/DSE code invalidates every entry
+    (conservative by design: results are cheap to recompute relative
+    to debugging a stale cache),
   * **program** — ``Program.fingerprint()`` (structural IR hash),
   * **data** — array names, dtypes, shapes and bytes; parameter values,
   * **configuration** — mode, engine class (``"-"`` for STA, which has
@@ -42,14 +43,16 @@ CACHE_FORMAT = 1
 
 
 def code_version() -> str:
-    """sha256 over the repro.core + repro.dse source files (cached)."""
+    """sha256 over the repro.core + repro.analysis + repro.dse source
+    files (cached)."""
     global _CODE_VERSION
     if _CODE_VERSION is None:
+        import repro.analysis
         import repro.core
         import repro.dse
 
         h = hashlib.sha256()
-        for pkg in (repro.core, repro.dse):
+        for pkg in (repro.core, repro.analysis, repro.dse):
             root = os.path.dirname(pkg.__file__)
             for fn in sorted(os.listdir(root)):
                 if fn.endswith(".py"):
@@ -70,6 +73,7 @@ def result_cache_key(
     version: Optional[str] = None,
     speculation: str = "-",
     predictor: str = "-",
+    static_prune: str = "-",
 ) -> str:
     """Content hash naming one cache entry (hex sha256).
 
@@ -81,7 +85,13 @@ def result_cache_key(
     actually speculates, else the predictor knob — distinct predictors
     produce distinct gate schedules, hence distinct results. The
     resolved ``spec_runahead`` travels in ``sim`` (``relevant_sim``
-    keeps it only for speculating points).
+    keeps it only for speculating points). ``static_prune`` is the
+    *prune class* (``SweepPoint.prune_class``): ``"-"`` for the
+    baseline hazard plan (and always for STA), ``"prune"`` when the
+    certifier's forced-pass drops are applied — the variants are
+    proven bit-identical but keyed separately so a certifier bug can
+    never cross-contaminate entries (the certifier code itself is in
+    the code version).
     """
     h = hashlib.sha256()
     h.update(f"format={CACHE_FORMAT}\x00".encode())
@@ -94,6 +104,7 @@ def result_cache_key(
     h.update(repr(sorted((params or {}).items())).encode())
     h.update(f"\x00{mode}\x00{engine_class}\x00{sim!r}\x00{speculation}".encode())
     h.update(f"\x00{predictor}".encode())
+    h.update(f"\x00{static_prune}".encode())
     return h.hexdigest()
 
 

@@ -113,6 +113,9 @@ class GroupContext:
         self.arrays = arrays
         self.params = params
         self._strict_checked = False
+        # statically-pruned hazard-plan variants (DESIGN.md §12), keyed
+        # by forwarding class; built only when a run asks for one
+        self._comp_pruned: dict[bool, simulator.Compiled] = {}
 
     # -- compile front-end -------------------------------------------------
 
@@ -130,8 +133,24 @@ class GroupContext:
             predictor=self.group.predictor,
         )
 
-    def comp(self, mode: str) -> simulator.Compiled:
-        return self.comp_fwd if mode == "FUS2" else self.comp_nofwd
+    def comp(self, mode: str, static_prune: bool = False) -> simulator.Compiled:
+        """Shared compile for ``mode``. ``static_prune`` selects the
+        certifier-pruned hazard-plan variant (DESIGN.md §12); its kept
+        pairs are a subset of the baseline's, so the group's
+        ``nodep_bits`` (built over the baseline plans' union) cover
+        every pair the pruned plan can look up."""
+        if not static_prune:
+            return self.comp_fwd if mode == "FUS2" else self.comp_nofwd
+        fwd = mode == "FUS2"
+        comp = self._comp_pruned.get(fwd)
+        if comp is None:
+            comp = simulator.Compiled(
+                self.program, forwarding=fwd,
+                speculation=self.group.speculation,
+                predictor=self.group.predictor, static_prune=True,
+            )
+            self._comp_pruned[fwd] = comp
+        return comp
 
     @cached_property
     def _traced(self) -> tuple:

@@ -77,6 +77,7 @@ class SweepResult:
                 "sizing": p.sizing, "sim": dict(p.sim),
                 "speculation": p.speculation,
                 "predictor": p.predictor,
+                "static_prune": p.static_prune,
                 "cycles": r.cycles, "dram_bursts": r.dram_bursts,
                 "dram_requests": r.dram_requests, "forwards": r.forwards,
                 "squashed": r.squashed,
@@ -182,11 +183,16 @@ def _execute_run(ctx: GroupContext, run: UniqueRun, validate: bool):
     rep = run.rep
     p = rep.sim_params()
     mode = rep.mode
+    # prune_class folds STA (and static_prune=False) to the baseline
+    # compile, so the pruned variant is built only when a dynamic-mode
+    # run actually requests it
+    prune = rep.prune_class == "prune"
     shared = ctx.shared_for(mode)
     oracle_loads = ctx.oracle_loads_if(validate and mode != "STA")
     if mode == "STA" or rep.engine == "cycle":
         res = simulator.simulate_traced(
-            ctx.comp(mode), ctx.traces, ctx.arrays, ctx.params, mode=mode,
+            ctx.comp(mode, static_prune=prune), ctx.traces, ctx.arrays,
+            ctx.params, mode=mode,
             sim=p, engine=rep.engine, oracle_loads=oracle_loads,
             shared=shared, spec_plan=ctx.spec_plan,
         )
@@ -194,7 +200,8 @@ def _execute_run(ctx: GroupContext, run: UniqueRun, validate: bool):
     from repro.core import engine_event
 
     ev = engine_event.EventEngine(
-        ctx.comp(mode), ctx.traces, ctx.arrays, ctx.params, mode, p,
+        ctx.comp(mode, static_prune=prune), ctx.traces, ctx.arrays,
+        ctx.params, mode, p,
         oracle_loads=oracle_loads, shared=shared, spec=ctx.spec_plan,
     )
     res = ev.run()
@@ -230,6 +237,7 @@ def _run_group_task(args):
                 ctx.program, ctx.arrays, ctx.params, rep.mode,
                 "-" if rep.mode == "STA" else rep.engine, rep.relevant_sim,
                 speculation=rep.spec_class, predictor=rep.predictor_class,
+                static_prune=rep.prune_class,
             )
             # validate=True means "actually check this configuration":
             # cached results carry no validation, so only write-through

@@ -106,6 +106,11 @@ class SweepPoint:
     sizing: str = "base"  # display label for the sim overrides
     speculation: str = "off"  # loss-of-decoupling policy (DESIGN.md §10)
     predictor: str = "auto"  # speculative-AGU value predictor (dae.PREDICTORS)
+    # hazard-plan variant (DESIGN.md §12): certifier-proven forced-pass
+    # pairs dropped before pruning. Results are proven bit-identical to
+    # the baseline plan (tests/test_deps.py); the axis exists to A/B
+    # planner cost and pair counts at sweep scale
+    static_prune: bool = False
 
     def __post_init__(self):
         assert self.kernel in programs.REGISTRY, f"unknown kernel {self.kernel!r}"
@@ -130,6 +135,7 @@ class SweepPoint:
         return (
             self.kernel, self.scale, self.mode, self.engine,
             self.trace_mode, self.sim, self.speculation, self.predictor,
+            self.static_prune,
         )
 
     @property
@@ -176,6 +182,23 @@ class SweepPoint:
         return tuple((k, v) for k, v in self.sim if k in fields)
 
     @property
+    def prune_class(self) -> str:
+        """Hazard-plan-variant part of the result identity: ``"-"`` for
+        the baseline plan, ``"prune"`` with ``static_prune``. The
+        certifier's drops are *proven* timing-invisible, but unlike the
+        registry-metadata folds (``spec_class``) that proof rests on
+        the certifier itself — keying the variants separately means a
+        certifier bug can never silently serve a baseline cache entry
+        for a pruned point (or vice versa). The certifier's code is in
+        the cache's ``code_version`` (repro.analysis is hashed), so
+        verdict changes invalidate pruned entries wholesale. STA folds
+        to ``"-"``: it consumes ``all_pairs``, which static pruning
+        provably leaves unchanged (drops land in ``plan.pruned``)."""
+        if self.mode == "STA" or not self.static_prune:
+            return "-"
+        return "prune"
+
+    @property
     def result_key(self) -> tuple:
         """Dedup/cache identity: what the SimResult depends on.
 
@@ -183,12 +206,14 @@ class SweepPoint:
         SimParams override the mode never reads, and folds the
         speculation and predictor knobs for non-speculative kernels
         (``spec_class``/``predictor_class``) — the result-invariances
-        the planner exploits (DESIGN.md §9.1).
+        the planner exploits (DESIGN.md §9.1). The hazard-plan variant
+        travels as ``prune_class``.
         """
         engine_class = "-" if self.mode == "STA" else self.engine
         return (
             self.kernel, self.scale, self.mode, engine_class,
             self.relevant_sim, self.spec_class, self.predictor_class,
+            self.prune_class,
         )
 
 
@@ -219,6 +244,10 @@ class SweepSpec:
     # speculative-AGU predictor axis (dae.PREDICTORS); folds to one
     # result for points that never speculate (predictor_class)
     predictors: Sequence[str] = ("auto",)
+    # hazard-plan-variant axis (DESIGN.md §12): certifier-dropped
+    # forced-pass pairs on/off; results are proven bit-identical, the
+    # axis A/Bs planner cost and pair counts
+    static_prunes: Sequence[bool] = (False,)
     extra: Sequence["SweepSpec"] = ()
 
     def points(self) -> list[SweepPoint]:
@@ -235,17 +264,19 @@ class SweepSpec:
                     for tm in self.trace_modes:
                         for spec_mode in self.speculations:
                             for pred in self.predictors:
-                                for label, sim in sizings.items():
-                                    p = SweepPoint(
-                                        kernel=k, scale=scale, mode=mode,
-                                        engine=engine, trace_mode=tm,
-                                        sim=_canon_sim(sim), sizing=label,
-                                        speculation=spec_mode,
-                                        predictor=pred,
-                                    )
-                                    if p.point_id not in seen:
-                                        seen.add(p.point_id)
-                                        out.append(p)
+                                for sp in self.static_prunes:
+                                    for label, sim in sizings.items():
+                                        p = SweepPoint(
+                                            kernel=k, scale=scale, mode=mode,
+                                            engine=engine, trace_mode=tm,
+                                            sim=_canon_sim(sim), sizing=label,
+                                            speculation=spec_mode,
+                                            predictor=pred,
+                                            static_prune=bool(sp),
+                                        )
+                                        if p.point_id not in seen:
+                                            seen.add(p.point_id)
+                                            out.append(p)
         for sub in self.extra:
             for p in sub.points():
                 if p.point_id not in seen:

@@ -1,0 +1,437 @@
+"""Symbolic dependence certifier, hint sanitizer and linter (DESIGN.md §12).
+
+Four contracts are pinned here:
+
+  1. **Certifier soundness, differentially** — every verdict the
+     certifier emits over random affine programs and the registered
+     kernels is checked against brute-force enumeration of the actual
+     traced address streams: ``never_conflict`` streams never share an
+     address (forced-pass pairs additionally have an all-true §5.6
+     NoDependence bit stream), ``min_distance(d)`` conflicts are at
+     least ``d`` apart at the shared depth, and symbolically-free ops
+     really never collide with a batched store.
+  2. **static_prune is behavior-preserving** — cycles and arrays are
+     bit-identical with the certifier's forced-pass drops applied, on
+     every registered kernel, and across engines × trace modes × modes
+     on the kernel whose plan actually shrinks.
+  3. **The hint sanitizer and the linter agree** — a contradictory
+     ``MonotonicHint`` is caught statically (RPL001) and dynamically
+     (``HintViolation`` from both engines and the wave executor, naming
+     the op and the first violating instance).
+  4. **Lint output is stable** — codes are pinned and the committed
+     ``tests/fixtures/lint_all.txt`` run stays reproducible.
+"""
+
+import io
+import os
+from contextlib import redirect_stdout
+
+import numpy as np
+import pytest
+
+from repro.analysis import deps, lint
+from repro.core import dae as daelib
+from repro.core import du as dulib
+from repro.core import executor
+from repro.core import hazards as hz
+from repro.core import loopir as ir
+from repro.core import monotonic as mono
+from repro.core import programs
+from repro.core import schedule as schedlib
+from repro.core import simulator
+
+from loopir_strategies import random_affine_program, random_wave_program
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "lint_all.txt")
+
+NONSPEC = sorted(n for n in programs.REGISTRY if not programs.get(n).speculative)
+
+
+def _small_scale(name: str) -> int:
+    return max(8, programs.get(name).default_scale // 8)
+
+
+# ---------------------------------------------------------------------------
+# 1. certifier soundness: verdicts vs brute-force stream enumeration
+# ---------------------------------------------------------------------------
+
+
+def _front_end(prog, arrays, params):
+    dres = daelib.decouple(prog)
+    infos = mono.analyze_program(prog)
+    plan = hz.build_plan(prog, dres, infos, forwarding=False)
+    traces = schedlib.trace_program(prog, dres, arrays, params, mode="auto")
+    return dres, plan, traces
+
+
+def _brute_force_check(prog, plan, traces):
+    """Verify every non-unknown verdict against the observed streams."""
+    facts = deps.stream_facts(prog)
+    all_pairs = list(plan.pairs) + [p for p, _r in plan.pruned]
+    verdicts = deps.certify_pairs(prog, all_pairs, facts=facts)
+    checked = 0
+    for pair in all_pairs:
+        v = verdicts[(pair.dst, pair.src)]
+        dt, st = traces[pair.dst], traces[pair.src]
+        if v.kind == deps.NEVER and v.forced_pass:
+            # the §5.6 bit must be true at every single evaluation
+            bits = dulib.nodependence_bits([pair], traces)[(pair.dst, pair.src)]
+            assert bool(np.all(bits)), (pair.dst, pair.src, v.evidence)
+            checked += 1
+        elif v.kind == deps.NEVER:
+            assert not (set(dt.addr.tolist()) & set(st.addr.tolist())), (
+                pair.dst, pair.src, v.evidence,
+            )
+            checked += 1
+        elif v.kind == deps.DISTANCE:
+            k = pair.shared_depth
+            common = set(dt.addr.tolist()) & set(st.addr.tolist())
+            for a in common:
+                di = dt.sched[dt.addr == a, k - 1]
+                sj = st.sched[st.addr == a, k - 1]
+                gap = np.abs(di[:, None] - sj[None, :])
+                assert int(gap.min()) >= v.distance, (
+                    pair.dst, pair.src, a, v.distance, v.evidence,
+                )
+            checked += 1
+
+    # per-op conflict-freedom certificates (coarsener admission)
+    free = deps.symbolically_free_ops(prog, facts=facts)
+    store_addrs: dict[str, set] = {}
+    for op, _path in prog.mem_ops():
+        if op.is_store:
+            store_addrs.setdefault(op.array, set()).update(
+                traces[op.id].addr.tolist()
+            )
+    for op, _path in prog.mem_ops():
+        if not free.get(op.id):
+            continue
+        addrs = traces[op.id].addr
+        others = set()
+        for other, _p in prog.mem_ops():
+            if other.id != op.id and other.array == op.array and (
+                op.is_store or other.is_store
+            ):
+                others.update(traces[other.id].addr.tolist())
+        assert not (set(addrs.tolist()) & others), op.id
+        if op.is_store and len(addrs) > 1:
+            assert int(np.diff(addrs).min()) >= 1, op.id
+        checked += 1
+    return checked
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_certifier_differential_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    prog, arrays, params = random_affine_program(rng)
+    _dres, plan, traces = _front_end(prog, arrays, params)
+    _brute_force_check(prog, plan, traces)
+
+
+@pytest.mark.parametrize("name", NONSPEC)
+def test_certifier_differential_registered(name):
+    prog, arrays, params = programs.get(name).make(_small_scale(name))
+    _dres, plan, traces = _front_end(prog, arrays, params)
+    _brute_force_check(prog, plan, traces)
+
+
+def test_certifier_finds_forced_pass_on_table1_kernel():
+    """≥1 Table-1 kernel has a provably-droppable pair (the ISSUE's
+    evidence bar): tanh+spmv's intra-PE RAW on the gather array."""
+    prog, _a, _p = programs.get("tanh+spmv").make(64)
+    dres = daelib.decouple(prog)
+    infos = mono.analyze_program(prog)
+    plan = hz.build_plan(prog, dres, infos, forwarding=False)
+    verdicts = deps.certify_pairs(prog, plan.pairs)
+    assert any(v.forced_pass for v in verdicts.values())
+
+
+try:
+    from hypothesis import given, settings
+
+    from loopir_strategies import affine_programs
+
+    @given(affine_programs())
+    @settings(deadline=None)
+    def test_certifier_differential_hypothesis(pap):
+        prog, arrays, params = pap
+        _dres, plan, traces = _front_end(prog, arrays, params)
+        _brute_force_check(prog, plan, traces)
+except ImportError:  # pragma: no cover - hypothesis is optional
+    pass
+
+
+# ---------------------------------------------------------------------------
+# 2. static_prune: provably behavior-preserving
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(programs.REGISTRY))
+def test_static_prune_bit_identical_every_kernel(name):
+    bench = programs.get(name)
+    prog, arrays, params = bench.make(_small_scale(name))
+    spec = "auto" if bench.speculative else "off"
+    base = simulator.simulate(
+        prog, arrays, params, mode="FUS2", engine="event", speculation=spec
+    )
+    pruned = simulator.simulate(
+        prog, arrays, params, mode="FUS2", engine="event", speculation=spec,
+        static_prune=True,
+    )
+    assert base.cycles == pruned.cycles
+    assert sorted(base.arrays) == sorted(pruned.arrays)
+    for k in base.arrays:
+        np.testing.assert_array_equal(base.arrays[k], pruned.arrays[k])
+
+
+@pytest.mark.parametrize("engine", ["event", "cycle"])
+@pytest.mark.parametrize("trace_mode", ["auto", "interp"])
+@pytest.mark.parametrize("mode", ["LSQ", "FUS1", "FUS2"])
+def test_static_prune_full_matrix_on_pruning_kernel(mode, engine, trace_mode):
+    """tanh+spmv actually loses a pair under static_prune — identical
+    cycles/arrays across both engines and trace modes proves the drop is
+    timing-invisible, not merely value-preserving. validate_hints rides
+    along: the kernel's (truthful) hints pass the dynamic sanitizer."""
+    prog, arrays, params = programs.get("tanh+spmv").make(48)
+    kw = dict(mode=mode, engine=engine, trace_mode=trace_mode,
+              validate_hints=True)
+    base = simulator.simulate(prog, arrays, params, **kw)
+    pruned = simulator.simulate(prog, arrays, params, static_prune=True, **kw)
+    assert base.cycles == pruned.cycles
+    for k in base.arrays:
+        np.testing.assert_array_equal(base.arrays[k], pruned.arrays[k])
+
+
+def test_static_prune_plan_shape():
+    """The drop lands in ``plan.pruned`` with a ``static:`` reason, the
+    kept set shrinks, and ``all_pairs`` (what STA consumes) is unchanged."""
+    prog, _a, _p = programs.get("tanh+spmv").make(48)
+    base = simulator.Compiled(prog, forwarding=True)
+    pruned = simulator.Compiled(prog, forwarding=True, static_prune=True)
+    assert len(pruned.plan.pairs) < len(base.plan.pairs)
+    reasons = [r for _p2, r in pruned.plan.pruned if r.startswith("static:")]
+    assert reasons
+    key = lambda p: (p.dst, p.src, p.kind)
+    assert sorted(map(key, base.all_pairs)) == sorted(
+        map(key, pruned.all_pairs)
+    )
+
+
+# symbolic wave admission: bit-identical batching with enumeration skipped
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_symbolic_admission_identical_batching_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    prog, arrays, params = random_wave_program(rng)
+    on = executor.build_wave_plan(prog, arrays, params, symbolic_admission=True)
+    off = executor.build_wave_plan(prog, arrays, params, symbolic_admission=False)
+    np.testing.assert_array_equal(on.req_step, off.req_step)
+    assert off.stats.n_sym_requests == 0
+
+
+@pytest.mark.parametrize("name", ["RAWloop", "stream_dot", "hist+add"])
+def test_symbolic_admission_admits_requests_on_registered(name):
+    prog, arrays, params = programs.get(name).make(_small_scale(name))
+    on = executor.build_wave_plan(prog, arrays, params, symbolic_admission=True)
+    off = executor.build_wave_plan(prog, arrays, params, symbolic_admission=False)
+    assert on.stats.n_sym_requests > 0 and on.stats.sym_ops
+    np.testing.assert_array_equal(on.req_step, off.req_step)
+
+
+# ---------------------------------------------------------------------------
+# 3. contradictory hints: caught statically AND dynamically
+# ---------------------------------------------------------------------------
+
+
+def _lying_hint_program(n=8):
+    """Address (n-1)-i strictly decreases inside the innermost loop while
+    the hint swears it is monotonic."""
+    hint = ir.MonotonicHint(innermost_monotonic=True)
+    loop = ir.Loop("i", ir.Const(n), (
+        ir.Load("ld_a", "A", ir.Bin("-", ir.Const(n - 1), ir.Var("i")),
+                hint=hint),
+        ir.Store("st_o", "out", ir.Var("i"), ir.LoadVal("ld_a")),
+    ))
+    arrays = {
+        "A": np.arange(n, dtype=np.float64),
+        "out": np.zeros(n, dtype=np.float64),
+    }
+    return ir.Program("lying_hint", loops=(loop,)), arrays, {}
+
+
+def _omitted_reset_program(outer=3, inner=4):
+    """Address j resets every outer iteration; the hint's explicit
+    ``non_monotonic_outer`` omits depth 1, so every reset is a lie."""
+    hint = ir.MonotonicHint(
+        innermost_monotonic=True, non_monotonic_outer=frozenset()
+    )
+    loop = ir.Loop("i", ir.Const(outer), (
+        ir.Loop("j", ir.Const(inner), (
+            ir.Load("ld_a", "A", ir.Var("j"), hint=hint),
+            ir.Store("st_o", "out", ir.Var("i") * inner + ir.Var("j"),
+                     ir.LoadVal("ld_a")),
+        )),
+    ))
+    arrays = {
+        "A": np.arange(inner, dtype=np.float64),
+        "out": np.zeros(outer * inner, dtype=np.float64),
+    }
+    return ir.Program("omitted_reset", loops=(loop,)), arrays, {}
+
+
+@pytest.mark.parametrize("make", [_lying_hint_program, _omitted_reset_program])
+def test_contradictory_hint_caught_statically(make):
+    prog, _arrays, _params = make()
+    diags = lint.lint_program(prog, kernel=prog.name)
+    hits = [d for d in diags if d.code == "RPL001"]
+    assert hits and all(d.severity == "error" for d in hits)
+    assert any(d.where == "ld_a" for d in hits)
+
+
+@pytest.mark.parametrize("engine", ["event", "cycle"])
+@pytest.mark.parametrize("make", [_lying_hint_program, _omitted_reset_program])
+def test_contradictory_hint_caught_dynamically_engines(make, engine):
+    prog, arrays, params = make()
+    with pytest.raises(deps.HintViolation) as exc:
+        simulator.simulate(
+            prog, arrays, params, mode="FUS2", engine=engine,
+            validate_hints=True,
+        )
+    assert exc.value.op_id == "ld_a"
+    assert exc.value.addr < exc.value.prev_addr
+    assert "instance" in str(exc.value)
+
+
+@pytest.mark.parametrize("make", [_lying_hint_program, _omitted_reset_program])
+def test_contradictory_hint_caught_dynamically_executor(make):
+    prog, arrays, params = make()
+    plan = executor.build_wave_plan(prog, arrays, params)
+    with pytest.raises(deps.HintViolation) as exc:
+        executor.validate_plan_hints(plan)
+    assert exc.value.op_id == "ld_a"
+    with pytest.raises(deps.HintViolation):
+        executor.execute(prog, arrays, params, validate_hints=True)
+
+
+def test_truthful_hint_passes_sanitizer_and_resets_allowed():
+    """The omitted-reset program becomes legal once the hint admits the
+    depth-1 reset — and the linter then flags the hint as redundant
+    (RPL002) because the address is fully CR-analyzable."""
+    prog, arrays, params = _omitted_reset_program()
+    hint = ir.MonotonicHint(
+        innermost_monotonic=True, non_monotonic_outer=frozenset({1})
+    )
+    inner = prog.loops[0].body[0]
+    fixed = ir.Program(prog.name, loops=(
+        ir.Loop("i", prog.loops[0].trip, (
+            ir.Loop("j", inner.trip, (
+                ir.Load("ld_a", "A", ir.Var("j"), hint=hint),
+            ) + tuple(inner.body[1:])),
+        )),
+    ))
+    res = simulator.simulate(
+        fixed, arrays, params, mode="FUS2", validate_hints=True
+    )
+    assert res.cycles > 0
+    plan = executor.build_wave_plan(fixed, arrays, params)
+    executor.validate_plan_hints(plan)  # must not raise
+    diags = lint.lint_program(fixed, kernel="fixed")
+    assert any(d.code == "RPL002" and d.where == "ld_a" for d in diags)
+    assert not any(d.code == "RPL001" for d in diags)
+
+
+def test_check_hint_stream_unit():
+    hint = ir.MonotonicHint(innermost_monotonic=True,
+                            non_monotonic_outer=frozenset({1}))
+    sched = np.array([[0, 0], [0, 1], [1, 0], [1, 1]], dtype=np.int64)
+    # reset at the depth-1 advance is legal ...
+    deps.check_hint_stream("op", np.array([5, 9, 2, 4]), sched, hint)
+    # ... a decrease while only depth 2 advanced is not
+    with pytest.raises(deps.HintViolation) as exc:
+        deps.check_hint_stream("op", np.array([5, 3, 6, 7]), sched, hint)
+    assert exc.value.instance == (0, 1)
+    assert exc.value.addr == 3 and exc.value.prev_addr == 5
+
+
+# ---------------------------------------------------------------------------
+# 4. linter stability
+# ---------------------------------------------------------------------------
+
+
+def test_lint_codes_pinned():
+    assert sorted(lint.CODES) == [
+        "RPL001", "RPL002", "RPL003", "RPL004", "RPL005",
+    ]
+    assert tuple(lint.SEVERITIES) == ("error", "warning", "info")
+
+
+def test_lint_all_matches_committed_fixture():
+    """``python -m repro.analysis.lint --all`` reproduces the committed
+    fixture byte for byte (registered kernels stay lint-clean: no errors
+    or warnings, stable info diagnostics)."""
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        rc = lint.main(["--all"])
+    assert rc == 0
+    with open(FIXTURE, "r", encoding="utf-8") as f:
+        assert buf.getvalue() == f.read()
+
+
+def test_lint_flags_doomed_fifo_topology():
+    """A cross-PE scalar cycle is statically rejected (RPL004)."""
+    n = 8
+    loops = (
+        ir.Loop("i", ir.Const(n), (
+            ir.SetLocal("x", ir.Var("i") + ir.Local("y")),
+            ir.Store("st_a", "A", ir.Var("i"), ir.Local("x")),
+        )),
+        ir.Loop("j", ir.Const(n), (
+            ir.SetLocal("y", ir.Var("j") + ir.Local("x")),
+            ir.Store("st_b", "B", ir.Var("j"), ir.Local("y")),
+        )),
+    )
+    prog = ir.Program("fifo_cycle", loops=loops)
+    diags = lint.lint_program(prog, kernel="fifo_cycle")
+    assert any(d.code == "RPL004" and d.severity == "error" for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# 5. DSE axis: static_prune folds and caches correctly
+# ---------------------------------------------------------------------------
+
+
+def test_dse_static_prune_axis(tmp_path):
+    from repro.dse import cache as cachelib
+    from repro.dse import runner
+    from repro.dse.spec import SweepSpec
+
+    spec = SweepSpec(
+        kernels=("tanh+spmv",), scales={"tanh+spmv": 48},
+        modes=("STA", "FUS2"), static_prunes=(False, True),
+    )
+    pts = spec.points()
+    assert len(pts) == 4
+    # STA folds the axis (prune_class "-"), FUS2 keys the variants apart
+    assert len({p.result_key for p in pts}) == 3
+    res = runner.sweep(spec, cache_dir=str(tmp_path))
+    assert res.n_unique_runs == 3
+    by = {}
+    for pr in res.points:
+        by.setdefault(pr.point.mode, {})[pr.point.static_prune] = pr.result
+    for mode, d in by.items():
+        assert d[False].cycles == d[True].cycles, mode
+        for k in d[False].arrays:
+            np.testing.assert_array_equal(d[False].arrays[k], d[True].arrays[k])
+    # second sweep: everything served from the cache
+    res2 = runner.sweep(spec, cache_dir=str(tmp_path))
+    assert res2.n_cache_hits == 3
+
+    prog, arrays, params = programs.get("tanh+spmv").make(48)
+    k_base = cachelib.result_cache_key(
+        prog, arrays, params, "FUS2", "event", (), static_prune="-"
+    )
+    k_prune = cachelib.result_cache_key(
+        prog, arrays, params, "FUS2", "event", (), static_prune="prune"
+    )
+    assert k_base != k_prune

@@ -63,6 +63,13 @@ PUBLIC_API = [
     ("repro.kernels.wave_exec", "run_plan"),
     ("repro.kernels.wave_exec", "run_sequential"),
     ("repro.core.programs", None),
+    ("repro.analysis.deps", "certify_pairs"),
+    ("repro.analysis.deps", "stream_facts"),
+    ("repro.analysis.deps", "symbolically_free_ops"),
+    ("repro.analysis.deps", "check_hint_stream"),
+    ("repro.analysis.deps", "HintViolation"),
+    ("repro.analysis.lint", "lint_program"),
+    ("repro.analysis.lint", "Diagnostic"),
     ("repro.dse", "sweep"),
     ("repro.dse", "SweepSpec"),
     ("repro.dse.cache", "ResultCache"),
