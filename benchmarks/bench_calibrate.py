@@ -1,0 +1,112 @@
+"""Sweep-driven SimParams calibration evidence (``BENCH_CALIB.json``).
+
+Runs ``dse.calibrate()`` — the two-stage grid fit of ``sta_mem_dep_ii``
+(STA stage) and ``dram_latency`` x ``forward_latency`` (FUS2 stage)
+against the paper's Table-1 per-iteration cycle targets — and writes
+the committed calibration evidence:
+
+  * the fitted SimParams fields (the values baked into
+    ``simulator.SimParams`` defaults; the assert at the end keeps the
+    committed defaults and the fit from drifting apart),
+  * per-kernel measured vs target cycles/iteration and relative error,
+  * the full per-field fit curves (mean relative error at every grid
+    value), so a reader can see which fields the targets actually
+    identify (``forward_latency``'s curve is flat — the
+    identifiability rule keeps its default).
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/bench_calibrate.py \
+        --out BENCH_CALIB.json --scale-div 2 --workers 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro import dse
+from repro.core.simulator import SimParams
+from repro.dse.calibrate import FUS2_TARGETS_CPI, STA_TARGETS_CPI
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_CALIB.json")
+    ap.add_argument(
+        "--scale-div", type=int, default=2,
+        help="per-kernel scale = default_scale // scale-div (smaller "
+        "div = larger problems = steadier cycles/iter)",
+    )
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="coarse grids + small scales; checks the fit machinery, "
+        "not the committed values",
+    )
+    a = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    if a.smoke:
+        calib = dse.calibrate(
+            scale_div=16,
+            sta_grid=(128, 224),
+            dram_grid=(200, 400),
+            fwd_grid=(1,),
+            workers=a.workers,
+        )
+    else:
+        calib = dse.calibrate(scale_div=a.scale_div, workers=a.workers)
+    wall = time.perf_counter() - t0
+
+    defaults = SimParams()
+    committed = {
+        f: getattr(defaults, f) for f in calib.fitted
+    }
+    data = {
+        "smoke": a.smoke,
+        "wall_s": round(wall, 2),
+        "scales": calib.scales,
+        "iters_per_kernel": calib.iters,
+        "fitted": calib.fitted,
+        "committed_defaults": committed,
+        "mean_rel_err": calib.mean_rel_err,
+        "per_kernel": calib.per_kernel,
+        "fit_curves": calib.per_field,
+        "targets": {
+            "STA_cpi": dict(STA_TARGETS_CPI),
+            "FUS2_cpi": dict(FUS2_TARGETS_CPI),
+        },
+    }
+    with open(a.out, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+
+    for k, per in calib.per_kernel.items():
+        for stage, d in per.items():
+            print(f"{k:>10} {stage}: target {d['target_cpi']:7.1f} "
+                  f"fitted {d['fitted_cpi']:7.1f} cyc/iter "
+                  f"(rel err {d['rel_err']:.2%})")
+    print(f"fitted: {calib.fitted} (mean rel err "
+          f"{calib.mean_rel_err:.2%}, {wall:.1f}s)")
+
+    if not a.smoke:
+        # the committed SimParams defaults must BE the fit — a drift
+        # here means someone changed the model without re-calibrating
+        assert calib.fitted == committed, (
+            f"SimParams defaults {committed} drifted from the "
+            f"calibration fit {calib.fitted}: re-run this benchmark "
+            f"and update simulator.SimParams"
+        )
+        assert calib.mean_rel_err <= 0.10, (
+            f"calibration fit degraded: mean relative error "
+            f"{calib.mean_rel_err:.2%} > 10%"
+        )
+    assert dataclasses.replace(SimParams(), **calib.fitted) == calib.params
+    print(f"wrote {a.out}: defaults match fit, "
+          f"mean rel err {calib.mean_rel_err:.2%}")
+    return data
+
+
+if __name__ == "__main__":
+    main()

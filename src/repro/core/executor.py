@@ -66,6 +66,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import config as cfglib
 from repro.core import loopir as ir
 from repro.core import optable as optablelib
 
@@ -251,12 +252,13 @@ def build_wave_plan(
     program: ir.Program,
     arrays: dict[str, np.ndarray],
     params: Optional[dict[str, int]] = None,
-    trace_mode: str = "auto",
-    speculation: str = "off",
-    predictor: str = "auto",
-    batch_waves: bool = True,
-    fifo_depth: int = 4,
-    symbolic_admission: bool = True,
+    trace_mode=cfglib.UNSET,
+    speculation=cfglib.UNSET,
+    predictor=cfglib.UNSET,
+    batch_waves=cfglib.UNSET,
+    fifo_depth=cfglib.UNSET,
+    symbolic_admission=cfglib.UNSET,
+    config: Optional[cfglib.RunConfig] = None,
 ) -> WavePlan:
     """Run the AGU/CU front-end and emit the backend-consumable plan.
 
@@ -294,7 +296,32 @@ def build_wave_plan(
     producer-before-consumer dep edge (slot RAW) *and* bounded
     backpressure (slot WAW/WAR: push ``k+depth`` lands strictly after
     pop ``k``) — ``validate_plan`` asserts both per edge.
+
+    ``config=`` accepts a ``repro.core.config.RunConfig``; the
+    executor consumes its ``trace_mode``/``speculation``/``predictor``/
+    ``batch_waves``/``fifo_depth``/``symbolic_admission`` fields and
+    ignores the simulator-only ones (``mode``, ``engine``, ...). A
+    conflicting explicit kwarg raises ``config.ConfigConflict``.
     """
+    cfg = cfglib.resolve(
+        config, trace_mode=trace_mode, speculation=speculation,
+        predictor=predictor, batch_waves=batch_waves,
+        symbolic_admission=symbolic_admission,
+    )
+    trace_mode, speculation, predictor = (
+        cfg.trace_mode, cfg.speculation, cfg.predictor
+    )
+    batch_waves, symbolic_admission = cfg.batch_waves, cfg.symbolic_admission
+    # fifo_depth=None in a config means "default" (4 here, matching
+    # SimParams.fifo_depth) — only a real config value can conflict
+    if fifo_depth is cfglib.UNSET:
+        fifo_depth = cfg.fifo_depth if cfg.fifo_depth is not None else 4
+    elif cfg.fifo_depth is not None and cfg.fifo_depth != fifo_depth:
+        raise cfglib.ConfigConflict(
+            f"explicit fifo_depth={fifo_depth} conflicts with explicit "
+            f"config=RunConfig(fifo_depth={cfg.fifo_depth})"
+        )
+    fifo_depth = int(fifo_depth)
     params = params or {}
 
     from repro.core import coarsen as coarsenlib
@@ -1008,14 +1035,15 @@ def execute(
     program: ir.Program,
     arrays: dict[str, np.ndarray],
     params: Optional[dict[str, int]] = None,
-    trace_mode: str = "auto",
-    speculation: str = "off",
-    predictor: str = "auto",
-    backend: str = "numpy",
-    batch_waves: bool = True,
-    fifo_depth: int = 4,
-    symbolic_admission: bool = True,
-    validate_hints: bool = False,
+    trace_mode=cfglib.UNSET,
+    speculation=cfglib.UNSET,
+    predictor=cfglib.UNSET,
+    backend=cfglib.UNSET,
+    batch_waves=cfglib.UNSET,
+    fifo_depth=cfglib.UNSET,
+    symbolic_admission=cfglib.UNSET,
+    validate_hints=cfglib.UNSET,
+    config: Optional[cfglib.RunConfig] = None,
 ) -> ExecResult:
     """Wave-partitioned fused execution of ``program``.
 
@@ -1054,12 +1082,21 @@ def execute(
     ``validate_hints=True`` checks every ``MonotonicHint`` against the
     plan's actual request streams and raises
     ``analysis.deps.HintViolation`` on a lie.
+
+    ``config=`` accepts a ``repro.core.config.RunConfig``; the
+    executor consumes every field except the simulator-only ``mode``/
+    ``engine``/``spec_runahead``/``fifo_latency``/``static_prune``. A
+    conflicting explicit kwarg raises ``config.ConfigConflict``. Final
+    arrays are bit-identical between the two spellings.
     """
+    cfg = cfglib.resolve(
+        config, trace_mode=trace_mode, speculation=speculation,
+        predictor=predictor, backend=backend, batch_waves=batch_waves,
+        symbolic_admission=symbolic_admission, validate_hints=validate_hints,
+    )
+    backend, validate_hints = cfg.backend, cfg.validate_hints
     plan = build_wave_plan(
-        program, arrays, params, trace_mode=trace_mode,
-        speculation=speculation, predictor=predictor,
-        batch_waves=batch_waves, fifo_depth=fifo_depth,
-        symbolic_admission=symbolic_admission,
+        program, arrays, params, fifo_depth=fifo_depth, config=cfg,
     )
     if validate_hints:
         validate_plan_hints(plan)

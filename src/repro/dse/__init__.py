@@ -24,7 +24,13 @@ many-point service:
     forwarding-admissibility profile through ``du.check_pair_batch``.
   * the cache (``dse.cache``) — an on-disk result store keyed by
     (code version, program, arrays, params, mode, engine, sizing) so
-    repeated sweeps are incremental.
+    repeated sweeps are incremental, plus the append-only run journal.
+  * the sweep service layer (DESIGN.md §13) — ``shard``/
+    ``sweep_shard``/``merge_results`` for deterministic multi-host
+    partitions, ``sweep(resume=True)`` to restart from the surviving
+    cache, ``sweep(on_point=...)``/``iter_points()`` for streaming
+    observability, and ``calibrate`` to fit ``SimParams`` against the
+    paper's per-iteration cycle targets.
 
 Entry point::
 
@@ -35,20 +41,50 @@ Entry point::
 
 Evidence: ``benchmarks/sweep.py`` (committed as ``BENCH_DSE.json``)
 measures sweep throughput against the looped-``simulate()`` baseline
-and re-verifies per-point bit-identity at benchmark scale.
+and re-verifies per-point bit-identity at benchmark scale;
+``benchmarks/bench_calibrate.py`` (committed as ``BENCH_CALIB.json``)
+records the sweep-driven SimParams fit.
 """
 
-from repro.dse.cache import ResultCache, code_version
+from repro.dse.cache import ResultCache, SweepJournal, code_version
+from repro.dse.calibrate import CalibResult, calibrate, iteration_count
 from repro.dse.planner import plan
-from repro.dse.runner import SweepResult, sweep
-from repro.dse.spec import SweepPoint, SweepSpec
+from repro.dse.runner import (
+    SweepGroupError,
+    SweepResult,
+    SweepStats,
+    iter_points,
+    sweep,
+)
+from repro.dse.shard import (
+    ShardPlan,
+    merge_caches,
+    merge_results,
+    shard_plan,
+    sweep_shard,
+)
+from repro.dse.spec import RESULT_INERT_FIELDS, SweepPoint, SweepSpec, result_projection
 
 __all__ = [
     "SweepPoint",
     "SweepSpec",
     "SweepResult",
+    "SweepStats",
+    "SweepGroupError",
+    "SweepJournal",
+    "ShardPlan",
+    "CalibResult",
+    "RESULT_INERT_FIELDS",
     "ResultCache",
+    "calibrate",
     "code_version",
+    "iter_points",
+    "iteration_count",
+    "merge_caches",
+    "merge_results",
     "plan",
+    "result_projection",
+    "shard_plan",
     "sweep",
+    "sweep_shard",
 ]

@@ -20,6 +20,13 @@ does not:
 streams are bit-identical (the PR-2 contract), so all trace modes share
 one entry. Writes are atomic (tmp file + ``os.replace``), so concurrent
 sweeps at worst duplicate work, never corrupt entries.
+
+The sweep *journal* (``SweepJournal``) rides alongside the cache: an
+append-only ``journal.jsonl`` in the cache directory recording one line
+per completed unique run. The npz store stays the source of truth for
+resume — the journal exists for observability (what ran, where, how
+long) and resume accounting, so a corrupt journal line is skipped and
+counted, never fatal (DESIGN.md §13).
 """
 
 from __future__ import annotations
@@ -165,3 +172,65 @@ class ResultCache:
             if os.path.exists(tmp):
                 os.unlink(tmp)
             raise
+
+    def keys(self) -> set[str]:
+        """Keys of every readable-looking entry currently on disk."""
+        return {
+            fn[:-len(".npz")]
+            for fn in os.listdir(self.path)
+            if fn.endswith(".npz")
+        }
+
+
+class SweepJournal:
+    """Append-only ``journal.jsonl`` next to a sweep's npz cache.
+
+    One JSON object per line, written (with a flush) the moment a
+    unique run lands: the cache key, the run's (kernel, scale, mode,
+    engine, sizing) coordinates, whether it was a cache hit, and its
+    wall time. Readers must tolerate torn tails and garbage — a sweep
+    can be SIGKILLed mid-append — so ``load()`` skips-and-counts
+    corrupt lines instead of raising (pinned by
+    tests/test_sweep_service.py).
+    """
+
+    FILENAME = "journal.jsonl"
+
+    def __init__(self, cache_dir: str):
+        os.makedirs(cache_dir, exist_ok=True)
+        self.path = os.path.join(cache_dir, self.FILENAME)
+
+    def append(self, entry: dict) -> None:
+        line = json.dumps(entry, sort_keys=True)
+        with open(self.path, "a") as f:
+            f.write(line + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def load(self) -> tuple[list[dict], int]:
+        """(entries, n_corrupt): every parseable line, in order; corrupt
+        lines are skipped with a warning and counted."""
+        import warnings
+
+        entries: list[dict] = []
+        corrupt = 0
+        if not os.path.exists(self.path):
+            return entries, corrupt
+        with open(self.path) as f:
+            for i, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    obj = json.loads(line)
+                    if not isinstance(obj, dict):
+                        raise ValueError("journal entry is not an object")
+                except Exception:
+                    corrupt += 1
+                    warnings.warn(
+                        f"{self.path}:{i}: skipping corrupt journal entry",
+                        stacklevel=2,
+                    )
+                    continue
+                entries.append(obj)
+        return entries, corrupt

@@ -66,6 +66,11 @@ class Group:
     # defaults — their plan is unused
     predictor: str = "auto"
     spec_runahead: Optional[int] = None
+    # the planner's group identity (kernel, scale, spec_class,
+    # predictor_class, runahead_class): stable across shards —
+    # ``shard.merge_results`` sorts by it to restore the canonical
+    # single-host group order
+    class_key: tuple = ()
 
     @property
     def n_points(self) -> int:
@@ -96,6 +101,7 @@ def plan(points: list[SweepPoint]) -> list[Group]:
             speculation="auto" if sc == "auto" else "off",
             predictor=pc if pc != "-" else "auto",
             spec_runahead=rc if rc != "-" else None,
+            class_key=(k, s, sc, pc, rc),
         )
         for (k, s, sc, pc, rc), g in sorted(
             groups.items(), key=lambda kv: tuple(map(str, kv[0]))

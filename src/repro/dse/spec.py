@@ -40,6 +40,7 @@ import dataclasses
 from typing import Optional, Sequence, Union
 
 from repro.core import programs
+from repro.core.config import ConfigConflict, RunConfig
 from repro.core.dae import PREDICTORS
 from repro.core.simulator import SimParams
 
@@ -47,6 +48,21 @@ MODES = ("STA", "LSQ", "FUS1", "FUS2")
 ENGINES = ("cycle", "event")
 TRACE_MODES = ("auto", "compiled", "interp")
 SPECULATIONS = ("off", "auto")
+
+# RunConfig fields that never enter the result identity, with the proof
+# obligation that keeps them honest (tests/test_config.py pins that
+# every RunConfig field is either projected into result_projection()'s
+# output or listed here):
+#   trace_mode         — compiled/interp streams are bit-equal (PR 2)
+#   backend            — numpy/pallas replay the same WavePlan
+#                        (tests/test_pallas_parity.py)
+#   batch_waves        — batching coarsens steps, never results
+#   symbolic_admission — admission fast path emits bit-identical steps
+#   validate_hints     — a checker: raises or changes nothing
+RESULT_INERT_FIELDS = (
+    "trace_mode", "backend", "batch_waves", "symbolic_admission",
+    "validate_hints",
+)
 
 _SIM_FIELDS = tuple(f.name for f in dataclasses.fields(SimParams))
 
@@ -91,6 +107,84 @@ def _canon_sim(sim: Union[None, dict, SimParams]) -> tuple:
         if v != getattr(default, k):
             out.append((k, v))
     return tuple(out)
+
+
+# -- the result-identity projection (DESIGN.md §9.1) -------------------------
+# Module-level so SweepPoint's properties and result_projection() share
+# one implementation: the PR-3 invariances live in exactly one place.
+
+
+def _spec_class(kernel: str, speculation: str) -> str:
+    if not programs.REGISTRY[kernel].speculative:
+        return "-"
+    return speculation
+
+
+def _predictor_class(mode: str, spec_cls: str, predictor: str) -> str:
+    if mode == "STA" or spec_cls != "auto":
+        return "-"
+    return predictor
+
+
+def _runahead_class(mode: str, spec_cls: str, sim: tuple) -> Union[str, int]:
+    if mode == "STA" or spec_cls != "auto":
+        return "-"
+    return int(dict(sim).get("spec_runahead", SimParams().spec_runahead))
+
+
+def _relevant_sim(mode: str, spec_cls: str, sim: tuple) -> tuple:
+    fields = MODE_SIM_FIELDS[mode]
+    if spec_cls != "auto":
+        fields = tuple(f for f in fields if f not in _SPEC_FIELDS)
+    return tuple((k, v) for k, v in sim if k in fields)
+
+
+def _prune_class(mode: str, static_prune: bool) -> str:
+    if mode == "STA" or not static_prune:
+        return "-"
+    return "prune"
+
+
+def _merge_config_sim(config: RunConfig, sim) -> tuple:
+    """Fold a RunConfig's SimParams overrides into a sizing, canonical
+    tuple out; a field explicitly present in both with different values
+    raises ``ConfigConflict``."""
+    merged = dict(_canon_sim(sim))
+    for f, v in config.sim_overrides().items():
+        if f in merged and merged[f] != v:
+            raise ConfigConflict(
+                f"sizing sets {f}={merged[f]} but config=RunConfig "
+                f"carries {f}={v}"
+            )
+        merged[f] = v
+    return _canon_sim(merged)
+
+
+def result_projection(
+    kernel: str, scale: int, config: RunConfig, sim=()
+) -> tuple:
+    """Project one run configuration onto its *result identity* — THE
+    single place the DSE dedup key and the on-disk cache key derive
+    from a ``RunConfig``.
+
+    ``sim`` carries SimParams overrides (dict / canonical tuple /
+    ``SimParams``); the config's non-``None`` sim fields fold in first.
+    The output tuple is ``(kernel, scale, mode, engine_class,
+    relevant_sim, spec_class, predictor_class, prune_class)`` with the
+    PR-3 invariances applied (``SweepPoint.result_key`` delegates
+    here; fields listed in ``RESULT_INERT_FIELDS`` are dropped by
+    construction).
+    """
+    sim_t = _merge_config_sim(config, sim)
+    spec_cls = _spec_class(kernel, config.speculation)
+    return (
+        kernel, int(scale), config.mode,
+        "-" if config.mode == "STA" else config.engine,
+        _relevant_sim(config.mode, spec_cls, sim_t),
+        spec_cls,
+        _predictor_class(config.mode, spec_cls, config.predictor),
+        _prune_class(config.mode, config.static_prune),
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,14 +233,27 @@ class SweepPoint:
         )
 
     @property
+    def config(self) -> RunConfig:
+        """This point's knobs as a ``repro.core.config.RunConfig``.
+
+        SimParams overrides stay in ``self.sim`` (the config's three
+        sim-overlap fields remain ``None`` = inherit); the
+        executor-only fields keep their defaults — both are result-
+        inert here by construction.
+        """
+        return RunConfig(
+            mode=self.mode, engine=self.engine, trace_mode=self.trace_mode,
+            speculation=self.speculation, predictor=self.predictor,
+            static_prune=self.static_prune,
+        )
+
+    @property
     def spec_class(self) -> str:
         """Speculation part of the result identity: ``"-"`` for kernels
         that never speculate (the knob provably cannot change their
         result — ``decouple`` marks no PE, so ``"off"`` and ``"auto"``
         fold together), else the knob value itself."""
-        if not programs.REGISTRY[self.kernel].speculative:
-            return "-"
-        return self.speculation
+        return _spec_class(self.kernel, self.speculation)
 
     @property
     def predictor_class(self) -> str:
@@ -155,9 +262,7 @@ class SweepPoint:
         everything else the predictor knob is dead code and every value
         folds to one result. STA folds too: the analytical model never
         consults the SpecPlan."""
-        if self.mode == "STA" or self.spec_class != "auto":
-            return "-"
-        return self.predictor
+        return _predictor_class(self.mode, self.spec_class, self.predictor)
 
     @property
     def runahead_class(self) -> Union[str, int]:
@@ -165,10 +270,7 @@ class SweepPoint:
         the point speculates, else the resolved ``spec_runahead``
         (override or default) — it only reaches a result through a live
         ``SpecPlan`` (``"-"`` for STA, as ``predictor_class``)."""
-        if self.mode == "STA" or self.spec_class != "auto":
-            return "-"
-        sim = dict(self.sim)
-        return int(sim.get("spec_runahead", SimParams().spec_runahead))
+        return _runahead_class(self.mode, self.spec_class, self.sim)
 
     @property
     def relevant_sim(self) -> tuple:
@@ -176,10 +278,7 @@ class SweepPoint:
         (``MODE_SIM_FIELDS``) — the SimParams part of the result
         identity. ``squash_latency``/``spec_runahead`` only count when
         the point actually speculates."""
-        fields = MODE_SIM_FIELDS[self.mode]
-        if self.spec_class != "auto":
-            fields = tuple(f for f in fields if f not in _SPEC_FIELDS)
-        return tuple((k, v) for k, v in self.sim if k in fields)
+        return _relevant_sim(self.mode, self.spec_class, self.sim)
 
     @property
     def prune_class(self) -> str:
@@ -194,9 +293,7 @@ class SweepPoint:
         verdict changes invalidate pruned entries wholesale. STA folds
         to ``"-"``: it consumes ``all_pairs``, which static pruning
         provably leaves unchanged (drops land in ``plan.pruned``)."""
-        if self.mode == "STA" or not self.static_prune:
-            return "-"
-        return "prune"
+        return _prune_class(self.mode, self.static_prune)
 
     @property
     def result_key(self) -> tuple:
@@ -207,14 +304,10 @@ class SweepPoint:
         speculation and predictor knobs for non-speculative kernels
         (``spec_class``/``predictor_class``) — the result-invariances
         the planner exploits (DESIGN.md §9.1). The hazard-plan variant
-        travels as ``prune_class``.
+        travels as ``prune_class``. Delegates to
+        ``result_projection()`` — the one projection implementation.
         """
-        engine_class = "-" if self.mode == "STA" else self.engine
-        return (
-            self.kernel, self.scale, self.mode, engine_class,
-            self.relevant_sim, self.spec_class, self.predictor_class,
-            self.prune_class,
-        )
+        return result_projection(self.kernel, self.scale, self.config, self.sim)
 
 
 @dataclasses.dataclass
@@ -228,6 +321,15 @@ class SweepSpec:
     ``scale_div`` (tests use large divisors to stay tiny). Several
     grids can be stacked via ``extra`` (e.g. an STA-only engine grid);
     duplicate points are dropped at expansion.
+
+    ``config=`` seeds the grid from a ``repro.core.config.RunConfig``:
+    every axis left at its default collapses to the config's value
+    (``SweepSpec(config=RunConfig(mode="STA"))`` sweeps only STA), an
+    explicitly set axis wins unless the config field is *also*
+    non-default and absent from the axis — that raises
+    ``ConfigConflict``. The config's non-``None``
+    ``spec_runahead``/``fifo_depth``/``fifo_latency`` fold into every
+    sizing (conflicting sizing values raise).
     """
 
     kernels: Sequence[str] = tuple(programs.TABLE1)
@@ -249,9 +351,32 @@ class SweepSpec:
     # axis A/Bs planner cost and pair counts
     static_prunes: Sequence[bool] = (False,)
     extra: Sequence["SweepSpec"] = ()
+    # a RunConfig seeding every defaulted axis (see class docstring)
+    config: Optional[RunConfig] = None
+
+    def _axis(self, axis_name: str, cfg_field: str) -> tuple:
+        """Resolve one axis against ``self.config`` (see docstring)."""
+        val = tuple(getattr(self, axis_name))
+        if self.config is None:
+            return val
+        cfg_v = getattr(self.config, cfg_field)
+        if val != tuple(SweepSpec.__dataclass_fields__[axis_name].default):
+            cfg_default = RunConfig.__dataclass_fields__[cfg_field].default
+            if cfg_v != cfg_default and cfg_v not in val:
+                raise ConfigConflict(
+                    f"SweepSpec.{axis_name}={val} does not contain the "
+                    f"explicit config value {cfg_field}={cfg_v!r}"
+                )
+            return val
+        return (cfg_v,)
 
     def points(self) -> list[SweepPoint]:
         sizings = self.sizings if self.sizings is not None else {"base": {}}
+        if self.config is not None and self.config.sim_overrides():
+            sizings = {
+                label: dict(_merge_config_sim(self.config, sim))
+                for label, sim in sizings.items()
+            }
         out: list[SweepPoint] = []
         seen: set[tuple] = set()
         for k in self.kernels:
@@ -259,12 +384,12 @@ class SweepSpec:
                 scale = int(self.scales[k])
             else:
                 scale = max(programs.REGISTRY[k].default_scale // self.scale_div, 8)
-            for mode in self.modes:
-                for engine in self.engines:
-                    for tm in self.trace_modes:
-                        for spec_mode in self.speculations:
-                            for pred in self.predictors:
-                                for sp in self.static_prunes:
+            for mode in self._axis("modes", "mode"):
+                for engine in self._axis("engines", "engine"):
+                    for tm in self._axis("trace_modes", "trace_mode"):
+                        for spec_mode in self._axis("speculations", "speculation"):
+                            for pred in self._axis("predictors", "predictor"):
+                                for sp in self._axis("static_prunes", "static_prune"):
                                     for label, sim in sizings.items():
                                         p = SweepPoint(
                                             kernel=k, scale=scale, mode=mode,

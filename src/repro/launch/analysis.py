@@ -251,6 +251,52 @@ def pareto_front(rows: list, objectives=("cycles", "dram_bursts")) -> list:
     return keep
 
 
+class ParetoTracker:
+    """Incremental partial Pareto front over streamed sweep rows.
+
+    The live-observability companion of ``pareto_front``: feed it rows
+    as ``dse.sweep(on_point=...)`` / ``dse.iter_points()`` deliver
+    them and read ``front()`` at any moment. The dominance rule (and
+    the keep-first tie rule) match ``pareto_front`` exactly, so after
+    any prefix of updates ``front()`` equals
+    ``[rows[i] for i in pareto_front(rows_so_far, objectives)]`` —
+    pinned per-prefix by tests/test_sweep_service.py and at benchmark
+    scale by ``benchmarks/sweep.py --stream``.
+    """
+
+    def __init__(self, objectives=("cycles", "dram_bursts")):
+        self.objectives = tuple(objectives)
+        self._front: list = []  # (vector, row), insertion-ordered
+        self.n_seen = 0
+
+    def _vec(self, row) -> tuple:
+        return tuple(row[o] for o in self.objectives)
+
+    def update(self, row) -> bool:
+        """Offer one row; returns True when the front changed."""
+        self.n_seen += 1
+        v = self._vec(row)
+        for w, _r in self._front:
+            # w dominates v, or ties it (earlier row wins ties)
+            if all(a <= b for a, b in zip(w, v)):
+                return False
+        survivors = [
+            (w, r)
+            for w, r in self._front
+            if not (
+                all(a <= b for a, b in zip(v, w))
+                and any(a < b for a, b in zip(v, w))
+            )
+        ]
+        survivors.append((v, row))
+        self._front = survivors
+        return True
+
+    def front(self) -> list:
+        """Current Pareto-optimal rows, in first-seen order."""
+        return [r for _v, r in self._front]
+
+
 def summarize_sweep(rows: list) -> dict:
     """Sweep-level digest: speedups + per-kernel Pareto sizings.
 

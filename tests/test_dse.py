@@ -65,7 +65,7 @@ def test_sweep_matches_standalone(kernel):
         trace_modes=tms,
         sizings=SIZINGS,
     )
-    res = dse.sweep(spec, validate=True)
+    res = dse.sweep(spec, differential=True)
     assert res.n_points == 8 * len(tms)
     # trace modes dedup onto one run each: 4 modes x 2 sizings unique
     assert res.n_unique_runs == 8
@@ -191,8 +191,10 @@ def test_sim_param_projection_dedup():
 
 def test_strict_compiled_point_raises_like_standalone():
     """A trace_mode="compiled" point on a kernel outside the compiled
-    subset must raise the same TraceCompileError the standalone call
-    would (local-carried CSR row pointers force the interpreter)."""
+    subset must fail like the standalone call would: the sweep raises
+    ``SweepGroupError`` naming the (kernel, scale, spec_class) group
+    with the standalone ``TraceCompileError`` chained as its cause
+    (local-carried CSR row pointers force the interpreter)."""
     from repro.core import loopir as ir
     from repro.core.schedule import TraceCompileError
 
@@ -219,8 +221,10 @@ def test_strict_compiled_point_raises_like_standalone():
     )
     try:
         pt = dse.SweepPoint("_carried_test", 8, mode="FUS2", trace_mode="compiled")
-        with pytest.raises(TraceCompileError):
+        with pytest.raises(dse.SweepGroupError) as ei:
             dse.sweep([pt])
+        assert "_carried_test" in str(ei.value)
+        assert isinstance(ei.value.__cause__, TraceCompileError)
         # under "auto" the same kernel falls back per PE and runs fine
         res = dse.sweep([dse.SweepPoint("_carried_test", 8, mode="FUS2")])
         _assert_point_matches_standalone(res.points[0])

@@ -17,7 +17,10 @@ Checks, failing loudly on the first broken invariant:
      documented in the table and every benchmarks/ or tools/ script the
      workflow invokes is named somewhere in README/DESIGN — so a CI
      refactor cannot silently orphan a documented gate (or document a
-     gate that no longer runs).
+     gate that no longer runs),
+  5. the README "The knobs" table and ``repro.core.config.RunConfig``
+     agree exactly: one table row per dataclass field (backticked field
+     name in the first cell), no extra rows, no undocumented fields.
 
 Usage:  python tools/check_docs.py   (repo root, PYTHONPATH-free)
 """
@@ -54,6 +57,8 @@ PUBLIC_API = [
     ("repro.core.speculate", "SpecPlan"),
     ("repro.core.speculate", "trace_spec_pe"),
     ("repro.core.du", "check_pair_batch"),
+    ("repro.core.config", "RunConfig"),
+    ("repro.core.config", "resolve"),
     ("repro.core.executor", "execute"),
     ("repro.core.executor", "build_wave_plan"),
     ("repro.core.executor", "WavePlan"),
@@ -72,9 +77,17 @@ PUBLIC_API = [
     ("repro.analysis.lint", "Diagnostic"),
     ("repro.dse", "sweep"),
     ("repro.dse", "SweepSpec"),
+    ("repro.dse", "iter_points"),
+    ("repro.dse", "sweep_shard"),
+    ("repro.dse", "merge_results"),
+    ("repro.dse", "shard_plan"),
+    ("repro.dse", "calibrate"),
     ("repro.dse.cache", "ResultCache"),
+    ("repro.dse.cache", "SweepJournal"),
+    ("repro.dse.spec", "result_projection"),
     ("repro.launch.analysis", "sweep_speedups"),
     ("repro.launch.analysis", "pareto_front"),
+    ("repro.launch.analysis", "ParetoTracker"),
 ]
 
 errors: list[str] = []
@@ -222,6 +235,49 @@ else:
         if s.startswith(("benchmarks/", "tools/")) and s not in doc_text:
             err(f"ci.yml invokes `{s}` but neither README.md nor "
                 f"DESIGN.md mentions it")
+
+# -- 5. README knobs table <-> RunConfig fields ------------------------------
+# One row per dataclass field, backticked field name in the first cell.
+
+import dataclasses
+
+
+def parse_knob_table(readme: str) -> list[str]:
+    """First-cell backticked names of the README "The knobs" table."""
+    names: list[str] = []
+    in_section = False
+    for line in readme.splitlines():
+        if re.match(r"^#{2,}\s+The knobs", line):
+            in_section = True
+            continue
+        if in_section and line.startswith("#"):
+            break
+        if in_section and line.startswith("|"):
+            cells = [c.strip() for c in line.strip("|").split("|")]
+            if len(cells) < 2 or set(cells[0]) <= {"-", " ", ":"}:
+                continue
+            m = re.match(r"^`([A-Za-z_]+)`", cells[0])
+            if m:
+                names.append(m.group(1))
+    return names
+
+
+try:
+    from repro.core.config import RunConfig as _RunConfig
+except Exception as e:
+    err(f"cannot import repro.core.config.RunConfig: {e}")
+else:
+    knob_rows = parse_knob_table(open(os.path.join(ROOT, "README.md")).read())
+    cfg_fields = [f.name for f in dataclasses.fields(_RunConfig)]
+    if not knob_rows:
+        err('README.md: no "The knobs" table (## The knobs section)')
+    for name in sorted(set(cfg_fields) - set(knob_rows)):
+        err(f"README knobs table: RunConfig field `{name}` has no row")
+    for name in sorted(set(knob_rows) - set(cfg_fields)):
+        err(f"README knobs table: row `{name}` is not a RunConfig field")
+    dupes = {n for n in knob_rows if knob_rows.count(n) > 1}
+    for name in sorted(dupes):
+        err(f"README knobs table: duplicate row `{name}`")
 
 # -- 3. docstring audit ------------------------------------------------------
 
